@@ -1,0 +1,50 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.flash.params import DEFAULT_PARAMS
+from repro.workload.runner import RunResult, run
+from repro.workload.ycsb import generate
+
+# Paper grids (§VI-A4/A5, §VII)
+COVERAGES = (0.0, 0.10, 0.25, 0.50, 0.75)
+READ_RATIOS = (1.0, 0.8, 0.6, 0.4, 0.2)
+DISTRIBUTIONS = (("uniform", 0.0), ("skewed", 0.5), ("very_skewed", 0.9))
+
+# Simulation scale (queries per grid point).  Small enough for the full
+# grid to run in ~a minute; pass --scale N to benchmarks.run to multiply.
+N_QUERIES = 4000
+N_KEY_PAGES = 1024
+
+
+def run_pair(read_ratio: float, alpha: float, coverage: float, *,
+             n_queries: int = N_QUERIES, seed: int = 1,
+             **kw) -> tuple[RunResult, RunResult]:
+    wl = generate(n_queries, n_key_pages=N_KEY_PAGES, read_ratio=read_ratio,
+                  alpha=alpha, seed=seed)
+    base = run(wl, params=DEFAULT_PARAMS, system="baseline",
+               cache_coverage=coverage, **{k: v for k, v in kw.items()
+                                           if k != "full_page_read_ratio"})
+    sim = run(wl, params=DEFAULT_PARAMS, system="sim",
+              cache_coverage=coverage, **kw)
+    return base, sim
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        self._end = None
+        return self
+
+    def __exit__(self, *a):
+        self._end = time.perf_counter()
+
+    @property
+    def elapsed_us(self) -> float:
+        end = self._end if self._end is not None else time.perf_counter()
+        return (end - self.t0) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,32 @@
+"""Paper Fig 12: SiM QPS speedup over baseline across
+(read ratio x cache coverage x query distribution)."""
+from __future__ import annotations
+
+from benchmarks.common import (COVERAGES, DISTRIBUTIONS, READ_RATIOS, Timer,
+                               emit, run_pair)
+
+
+def main(scale: int = 1) -> None:
+    cells = []
+    with Timer() as t:
+        for dist_name, alpha in DISTRIBUTIONS:
+            for rr in READ_RATIOS:
+                for cov in COVERAGES:
+                    base, sim = run_pair(rr, alpha, cov,
+                                         n_queries=4000 * scale)
+                    speedup = sim.qps / base.qps if base.qps else float("inf")
+                    cells.append((dist_name, rr, cov, speedup))
+    n = len(cells)
+    for dist_name, rr, cov, s in cells:
+        emit(f"fig12_{dist_name}_r{int(rr*100)}_c{int(cov*100)}",
+             t.elapsed_us / n, f"speedup={s:.2f}")
+    wh = [s for d, rr, c, s in cells if rr <= 0.4]
+    ro = [s for d, rr, c, s in cells if rr == 1.0 and 0.0 < c <= 0.25]
+    emit("fig12_write_heavy_max", t.elapsed_us / n,
+         f"max_speedup={max(wh):.2f}(paper_up_to_9x)")
+    emit("fig12_read_only_low_cov", t.elapsed_us / n,
+         f"baseline_advantage={1-min(ro):.0%}(paper_8-20%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Fig 13: SiM energy consumption relative to baseline (NAND-side)."""
+from __future__ import annotations
+
+from benchmarks.common import (COVERAGES, DISTRIBUTIONS, READ_RATIOS, Timer,
+                               emit, run_pair)
+
+
+def main(scale: int = 1) -> None:
+    cells = []
+    with Timer() as t:
+        for dist_name, alpha in DISTRIBUTIONS:
+            for rr in READ_RATIOS:
+                for cov in COVERAGES:
+                    base, sim = run_pair(rr, alpha, cov,
+                                         n_queries=4000 * scale)
+                    ratio = sim.energy_pj / base.energy_pj
+                    cells.append((dist_name, rr, cov, ratio))
+    n = len(cells)
+    for dist_name, rr, cov, r in cells:
+        emit(f"fig13_{dist_name}_r{int(rr*100)}_c{int(cov*100)}",
+             t.elapsed_us / n, f"energy_ratio={r:.2f}")
+    typical = [r for d, rr, c, r in cells if 0.10 <= c <= 0.50 and rr <= 0.8]
+    emit("fig13_typical_savings", t.elapsed_us / n,
+         f"savings={1-min(typical):.0%}..{max(0.0, 1-max(typical)):.0%}"
+         f"(paper_10-45%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Fig 14 + Fig 16b: median read latency reduction and IQR comparison."""
+from __future__ import annotations
+
+from benchmarks.common import (COVERAGES, DISTRIBUTIONS, READ_RATIOS, Timer,
+                               emit, run_pair)
+
+
+def main(scale: int = 1) -> None:
+    cells = []
+    with Timer() as t:
+        for dist_name, alpha in DISTRIBUTIONS:
+            for rr in READ_RATIOS:
+                for cov in COVERAGES:
+                    base, sim = run_pair(rr, alpha, cov,
+                                         n_queries=4000 * scale)
+                    red = 1 - sim.read_median_ns / base.read_median_ns \
+                        if base.read_median_ns else 0.0
+                    cells.append((dist_name, rr, cov, red, base, sim))
+    n = len(cells)
+    for dist_name, rr, cov, red, _, _ in cells:
+        emit(f"fig14_{dist_name}_r{int(rr*100)}_c{int(cov*100)}",
+             t.elapsed_us / n, f"median_reduction={red:.1%}")
+    emit("fig14_max_reduction", t.elapsed_us / n,
+         f"max={max(c[3] for c in cells):.0%}(paper_up_to_89%)")
+
+    # Fig 16b: 40% read, random distribution — medians + IQR error bars
+    with Timer() as t2:
+        for cov in (0.10, 0.25, 0.50):
+            base, sim = run_pair(0.4, 0.0, cov, n_queries=4000 * scale)
+            emit(f"fig16b_c{int(cov*100)}", t2.elapsed_us,
+                 f"base_med={base.read_median_ns/1e3:.0f}us_iqr="
+                 f"{(base.read_p75_ns-base.read_p25_ns)/1e3:.0f}us_"
+                 f"sim_med={sim.read_median_ns/1e3:.0f}us_iqr="
+                 f"{(sim.read_p75_ns-sim.read_p25_ns)/1e3:.0f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Paper Fig 16a: flash write volume relative to no caching
+(40% reads, random distribution)."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, run_pair
+
+
+def main(scale: int = 1) -> None:
+    with Timer() as t:
+        base0, sim0 = run_pair(0.4, 0.0, 0.0, n_queries=4000 * scale)
+        for cov in (0.10, 0.25, 0.50, 0.75):
+            base, sim = run_pair(0.4, 0.0, cov, n_queries=4000 * scale)
+            emit(f"fig16a_c{int(cov*100)}", t.elapsed_us,
+                 f"base_rel={base.programs/base0.programs:.2f}_"
+                 f"sim_rel={sim.programs/sim0.programs:.2f}")
+
+
+if __name__ == "__main__":
+    main()

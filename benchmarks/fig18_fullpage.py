@@ -1,0 +1,28 @@
+"""Paper Fig 18: QPS speedup versus the fraction of reads that are SiM
+point reads (the remainder are legitimate full-page reads, e.g. LSM
+compaction or analytic scans).  sim_ratio=0 equals an all-full-page system."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, run_pair
+
+SIM_READ_RATIOS = (0.0, 0.25, 0.50, 0.75, 1.0)
+
+
+def main(scale: int = 1) -> None:
+    with Timer() as t:
+        for rr, tag in ((0.8, "read_dominant"), (0.2, "write_dominant")):
+            for dist, alpha in (("uniform", 0.0), ("very_skewed", 0.9)):
+                ref_qps = None
+                for sim_ratio in SIM_READ_RATIOS:
+                    base, sim = run_pair(
+                        rr, alpha, 0.10, n_queries=4000 * scale,
+                        full_page_read_ratio=1.0 - sim_ratio)
+                    if ref_qps is None:
+                        ref_qps = sim.qps      # all reads full-page
+                    emit(f"fig18_{tag}_{dist}_s{int(sim_ratio*100)}",
+                         t.elapsed_us,
+                         f"qps_rel={sim.qps/ref_qps:.2f}")
+
+
+if __name__ == "__main__":
+    main()

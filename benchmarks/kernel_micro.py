@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: sim_search / sim_gather / sim_fused / attention.
+
+On this CPU container kernels execute under the Pallas interpreter, so the
+wall numbers are NOT TPU timings — they are recorded for regression tracking
+and to exercise the full dispatch path.  The derived column carries the
+analytic per-page byte traffic, which *is* hardware-independent.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, emit
+from repro.kernels.sim_search.ops import sim_search
+from repro.kernels.sim_gather.ops import sim_gather
+from repro.kernels.sim_fused.ops import sim_fused
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+def main(scale: int = 1) -> None:
+    rng = np.random.default_rng(0)
+    n_pages, n_q = 64, 8
+    lo = rng.integers(0, 2**32, (n_pages, 512), dtype=np.uint64
+                      ).astype(np.uint32)
+    hi = rng.integers(0, 2**32, (n_pages, 512), dtype=np.uint64
+                      ).astype(np.uint32)
+    q = rng.integers(0, 2**32, (n_q, 2), dtype=np.uint64).astype(np.uint32)
+    m = np.full((n_q, 2), 0xFFFFFFFF, dtype=np.uint32)
+
+    out = sim_search(lo, hi, q, m)                      # warm compile
+    jax.block_until_ready(out)
+    with Timer() as t:
+        jax.block_until_ready(sim_search(lo, hi, q, m))
+    emit("kernel_sim_search", t.elapsed_us,
+         f"pages={n_pages}_q={n_q}_out_bytes_per_page=64_in_4096")
+
+    chunks = rng.integers(0, 2**32, (n_pages, 64, 16), dtype=np.uint64
+                          ).astype(np.uint32)
+    bm = rng.integers(0, 2**32, (n_pages, 2), dtype=np.uint64
+                      ).astype(np.uint32)
+    g = sim_gather(chunks, bm, max_out=16)
+    jax.block_until_ready(g)
+    with Timer() as t:
+        jax.block_until_ready(sim_gather(chunks, bm, max_out=16))
+    emit("kernel_sim_gather", t.elapsed_us,
+         f"pages={n_pages}_max_out=16_mxu_onehot_matmul")
+
+    f = sim_fused(lo, hi, q[0], m[0], max_out=8)
+    jax.block_until_ready(f)
+    with Timer() as t:
+        jax.block_until_ready(sim_fused(lo, hi, q[0], m[0], max_out=8))
+    emit("kernel_sim_fused", t.elapsed_us,
+         "one_page_pass_for_search+gather(saves_1_hbm_read)")
+
+    B, S, H, HKV, D = 1, 256, 4, 2, 64
+    qa = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    ka = jnp.asarray(rng.normal(size=(B, S, HKV, D)), jnp.bfloat16)
+    va = jnp.asarray(rng.normal(size=(B, S, HKV, D)), jnp.bfloat16)
+    o = flash_attention(qa, ka, va)
+    jax.block_until_ready(o)
+    with Timer() as t:
+        jax.block_until_ready(flash_attention(qa, ka, va))
+    flops = 4 * B * H * S * S * D
+    emit("kernel_flash_attention", t.elapsed_us,
+         f"causal_gqa_flops={flops}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Beyond-paper experiment (motivated by §II-B): throughput under a peak-
+current cap.
+
+The paper argues the I/O phase's peak current limits intra-SSD parallelism
+and that match-mode's 11 mA bus (vs 152 mA storage-mode, Table I) lets more
+operations run concurrently within the same power budget.  The paper never
+quantifies this; we sweep the budget and report the QPS ratio.
+"""
+from __future__ import annotations
+
+from benchmarks.common import N_KEY_PAGES, Timer, emit
+from repro.flash.params import DEFAULT_PARAMS
+from repro.workload.runner import run
+from repro.workload.ycsb import generate
+
+BUDGETS_MA = (3000.0, 1000.0, 450.0, 300.0, 160.0)
+
+
+def main(scale: int = 1) -> None:
+    wl = generate(3000 * scale, n_key_pages=N_KEY_PAGES, read_ratio=1.0,
+                  alpha=0.0, seed=2)
+    with Timer() as t:
+        for budget in BUDGETS_MA:
+            b = run(wl, params=DEFAULT_PARAMS, system="baseline",
+                    cache_coverage=0.0, power_budget_ma=budget)
+            s = run(wl, params=DEFAULT_PARAMS, system="sim",
+                    cache_coverage=0.0, power_budget_ma=budget)
+            slots_storage = max(1, int(budget
+                                       / DEFAULT_PARAMS.bus_peak_ma_storage))
+            slots_match = max(1, int(budget
+                                     / DEFAULT_PARAMS.bus_peak_ma_match))
+            emit(f"power_budget_{int(budget)}mA", t.elapsed_us,
+                 f"sim_over_base_qps={s.qps / b.qps:.2f}_"
+                 f"concurrent_bursts_storage={slots_storage}_"
+                 f"match={slots_match}")
+
+
+if __name__ == "__main__":
+    main()

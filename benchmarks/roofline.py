@@ -1,0 +1,51 @@
+"""Roofline report: aggregates the dry-run JSON artifacts into the
+EXPERIMENTS.md table.  Requires a prior
+``python -m repro.launch.dryrun --all`` run.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Timer, emit
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main(scale: int = 1) -> None:
+    with Timer() as t:
+        files = sorted(DRYRUN_DIR.glob("*__single.json"))
+    if not files:
+        emit("roofline", t.elapsed_us,
+             "no_dryrun_artifacts(run_repro.launch.dryrun_--all_first)")
+        return
+    worst, best = None, None
+    for f in files:
+        r = json.loads(f.read_text())
+        cell = f"{r['arch']}_{r['shape']}"
+        if "skipped" in r:
+            emit(f"roofline_{cell}", t.elapsed_us, "SKIP_long_context")
+            continue
+        if r.get("status") != "ok":
+            emit(f"roofline_{cell}", t.elapsed_us, "ERROR")
+            continue
+        rl = r["roofline"]
+        frac = r["roofline_fraction"]
+        emit(f"roofline_{cell}", t.elapsed_us,
+             f"dom={rl['dominant']}_c={rl['compute_s']:.2f}s_"
+             f"m={rl['memory_s']:.2f}s_coll={rl['collective_s']:.2f}s_"
+             f"frac={frac:.4f}_useful={r['useful_flops_ratio']:.3f}")
+        if r["shape"] == "train_4k":
+            if worst is None or frac < worst[1]:
+                worst = (cell, frac)
+            if best is None or frac > best[1]:
+                best = (cell, frac)
+    if best:
+        emit("roofline_best_train_cell", t.elapsed_us,
+             f"{best[0]}_frac={best[1]:.4f}")
+        emit("roofline_worst_train_cell", t.elapsed_us,
+             f"{worst[0]}_frac={worst[1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--scale N`` multiplies the
+simulated query counts; ``--only fig12`` runs a single module; ``--skip-slow``
+drops the full-grid figures (used by CI smoke runs).
+
+The roofline report (framework §Roofline) is produced by
+``benchmarks.roofline`` from the dry-run artifacts; run
+``python -m repro.launch.dryrun --all`` first for that one.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig12_speedup, fig13_energy, fig14_latency,
+                        fig15_tail, fig16a_writes, fig17_batch,
+                        fig18_fullpage, kernel_micro, power_budget,
+                        roofline, table1_transfer, table3_distribution)
+
+MODULES = {
+    "table1": table1_transfer,
+    "table3": table3_distribution,
+    "fig12": fig12_speedup,
+    "fig13": fig13_energy,
+    "fig14": fig14_latency,
+    "fig15": fig15_tail,
+    "fig16a": fig16a_writes,
+    "fig17": fig17_batch,
+    "fig18": fig18_fullpage,
+    "kernels": kernel_micro,
+    "power": power_budget,
+    "roofline": roofline,
+}
+SLOW = {"fig12", "fig13", "fig14", "fig15", "fig17", "fig18"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(MODULES)
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in names:
+        if args.skip_slow and name in SLOW:
+            continue
+        mod = MODULES[name]
+        try:
+            if "scale" in mod.main.__code__.co_varnames:
+                mod.main(scale=args.scale)
+            else:
+                mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Paper Table I: worst-case transfer comparison, SiM vs conventional B-Tree.
+
+Back-of-the-envelope analytic model over the paper's own constants: a point
+query moves 128 B (64 B bitmap + 64 B chunk) at 40 MHz x 8 bit in match mode
+versus two full 4 KiB pages at 1600 MT/s in storage mode.  Currents from the
+cited datasheets (11 mA low-speed vs 152 mA high-speed bus).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit
+
+BUS_VOLTAGE = 1.2
+
+
+def rows():
+    # (label, io_bytes, bus_MBps, current_mA)
+    sim = ("sim", 128, 40.0, 11.0)
+    base = ("baseline", 8192, 1600.0, 152.0)
+    out = {}
+    for label, io, mbps, ma in (sim, base):
+        t_us = io / mbps                      # bytes / (MB/s) == us
+        e_nj = BUS_VOLTAGE * ma * t_us        # V * mA * us = nJ
+        out[label] = dict(io_bytes=io, bus_mhz=mbps, current_ma=ma,
+                          latency_us=t_us, energy_nj=e_nj)
+    return out
+
+
+def main() -> None:
+    with Timer() as t:
+        r = rows()
+    io_ratio = r["baseline"]["io_bytes"] / r["sim"]["io_bytes"]
+    cur_ratio = r["baseline"]["current_ma"] / r["sim"]["current_ma"]
+    e_ratio = r["baseline"]["energy_nj"] / r["sim"]["energy_nj"]
+    lat_ratio = r["baseline"]["latency_us"] / r["sim"]["latency_us"]
+    emit("table1_io_ratio", t.elapsed_us, f"{io_ratio:.0f}x_less_io")
+    emit("table1_current_ratio", t.elapsed_us,
+         f"{cur_ratio:.1f}x_peak_current(paper_13x)")
+    emit("table1_energy_ratio", t.elapsed_us,
+         f"{e_ratio:.1f}x_energy(paper_22x)")
+    emit("table1_latency", t.elapsed_us,
+         f"sim={r['sim']['latency_us']:.1f}us_base="
+         f"{r['baseline']['latency_us']:.1f}us(paper_3.2_vs_5.1)")
+
+
+if __name__ == "__main__":
+    main()

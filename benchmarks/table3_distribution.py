@@ -1,0 +1,19 @@
+"""Paper Table III: query concentration of the top-4 keys per distribution."""
+from __future__ import annotations
+
+from benchmarks.common import N_KEY_PAGES, Timer, emit
+from repro.workload.ycsb import KEYS_PER_PAGE, concentration_table
+
+
+def main(scale: int = 1) -> None:
+    n_keys = N_KEY_PAGES * KEYS_PER_PAGE
+    with Timer() as t:
+        for name, alpha in (("uniform", 0.0), ("skewed", 0.5),
+                            ("very_skewed", 0.9)):
+            top = concentration_table(n_keys, alpha)
+            emit(f"table3_{name}", t.elapsed_us,
+                 "_".join(f"{p:.4%}" for p in top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Database indexes on SiM (paper §V-A/B): B+Tree primary index, extendible
+hash index, and the I/O ledger against the CPU-centric baseline.
+
+Run:  PYTHONPATH=src python examples/database_index.py
+"""
+import numpy as np
+
+from repro.core.engine import SimChipArray
+from repro.index.baseline import BaselineBTree
+from repro.index.btree import SimBTree
+from repro.index.hashindex import SimHashIndex
+
+
+def main():
+    rng = np.random.default_rng(0)
+    keys = (rng.choice(10**9, size=5000, replace=False) + 1).astype(np.uint64)
+    values = keys * np.uint64(17)
+
+    print("=== B+Tree primary index (leaves on SiM) ===")
+    bt = SimBTree(SimChipArray(n_chips=8, pages_per_chip=64))
+    bt.bulk_load(keys, values)
+    bb = BaselineBTree(SimChipArray(n_chips=8, pages_per_chip=64))
+    bb.bulk_load(keys, values)
+    probes = rng.choice(keys, size=200, replace=False)
+    for k in probes:
+        v_sim, v_base = bt.lookup(int(k)), bb.lookup(int(k))
+        assert v_sim == v_base == int(k) * 17
+    sim_io = bt.stats.bitmap_bytes + bt.stats.chunk_bytes
+    print(f"200 point lookups agree with baseline")
+    print(f"  SiM I/O:      {sim_io:>10,} B "
+          f"({bt.stats.searches} searches, {bt.stats.gathers} gathers)")
+    print(f"  baseline I/O: {bb.bytes_read:>10,} B "
+          f"({bb.pages_read} full pages)")
+    print(f"  reduction:    {bb.bytes_read / sim_io:.0f}x")
+
+    print("\n=== range query (exact prefix decomposition, §V-C) ===")
+    lo, hi = int(np.percentile(keys, 50)), int(np.percentile(keys, 52))
+    r_sim = sorted(bt.range_query(lo, hi))
+    r_base = sorted(bb.range_query(lo, hi))
+    assert r_sim == r_base
+    print(f"range [{lo}, {hi}) -> {len(r_sim)} rows, results identical")
+
+    print("\n=== extendible hash index (bucket splits via §V-D) ===")
+    h = SimHashIndex(SimChipArray(n_chips=8, pages_per_chip=512))
+    for k in keys[:3000]:
+        h.insert(int(k), int(k) % 99991)
+    ok = all(h.lookup(int(k)) == int(k) % 99991 for k in keys[:3000:17])
+    print(f"3000 inserts, lookups ok={ok}, bucket splits={h.splits} "
+          f"(each split = 1 search + gather redistribution), "
+          f"directory depth={h.global_depth}")
+
+
+if __name__ == "__main__":
+    main()

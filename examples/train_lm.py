@@ -1,0 +1,28 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+checkpoints -> straggler watchdog, on a reduced model (CPU-sized; pass
+--arch/--steps to scale, the same driver runs pod-scale configs).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    run = train(args.arch, steps=args.steps, batch=args.batch,
+                seq_len=args.seq_len, ckpt_root=args.ckpt, ckpt_every=50,
+                log_every=20)
+    print(f"\nloss {run.losses[0]:.3f} -> {run.losses[-1]:.3f} over "
+          f"{run.steps_run} steps; checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE: 384 experts top-8 + 1 shared
+expert, d_ff(expert)=2048 (paper-table entry).  [arXiv:2501.kimi2; unverified]
+
+Memory note (DESIGN.md §5): ~1.03e12 params.  bf16 params + bf16 Adam
+moments = ~6 TB of state; at 512 chips that is ~11.7 GB/chip and fits v5e
+only with FSDP over the full (pod, data) product and bf16 moments —
+optimizer_dtype below records that choice; the roofline table quantifies it.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab_size=163840,
+    n_experts=384, top_k=8, moe_d_ff=2048, n_shared_experts=1,
+    optimizer_dtype="bfloat16",
+)

@@ -1,0 +1,38 @@
+"""SiM core: the paper's contribution as a composable library.
+
+Layers:
+  bits/match     — the matching specification (shared numpy/jnp)
+  page/randomize — on-flash layout and per-chunk randomization
+  ecc            — verification header, Optimistic Error Correction,
+                   concatenated chunk code
+  commands       — the 4-command SIMD ISA
+  engine         — functional chip model (latch pipeline, counters)
+  range_query    — range -> masked-equality decomposition (approx + exact)
+  bitweaving     — column packing for secondary indexes
+  scheduler      — deadline-based batch matching
+"""
+from .bits import (BITMAP_WORDS, CHUNK_BYTES, CHUNKS_PER_PAGE, PAGE_BYTES,
+                   SLOT_BYTES, SLOTS_PER_CHUNK, SLOTS_PER_PAGE, pack_bitmap,
+                   pair_to_u64, popcount_words, u64_to_pair, unpack_bitmap)
+from .bitweaving import Column, RowCodec
+from .commands import (Command, GatherResponse, Op, ReadFullResponse,
+                       SearchResponse)
+from .ecc import EccConfig, OpenVerdict, optimistic_open
+from .engine import SimChip, SimChipArray
+from .match import gather_chunks, match_slots, search_page
+from .page import EMPTY_SLOT, USER_SLOTS, BuiltPage, build_page
+from .range_query import (MaskedQuery, RangePlan, approximate_range,
+                          exact_range)
+from .scheduler import DeadlineScheduler
+
+__all__ = [
+    "BITMAP_WORDS", "CHUNK_BYTES", "CHUNKS_PER_PAGE", "PAGE_BYTES",
+    "SLOT_BYTES", "SLOTS_PER_CHUNK", "SLOTS_PER_PAGE", "pack_bitmap",
+    "pair_to_u64", "popcount_words", "u64_to_pair", "unpack_bitmap",
+    "Column", "RowCodec", "Command", "GatherResponse", "Op",
+    "ReadFullResponse", "SearchResponse", "EccConfig", "OpenVerdict",
+    "optimistic_open", "SimChip", "SimChipArray", "gather_chunks",
+    "match_slots", "search_page", "EMPTY_SLOT", "USER_SLOTS", "BuiltPage",
+    "build_page", "MaskedQuery", "RangePlan", "approximate_range",
+    "exact_range", "DeadlineScheduler",
+]

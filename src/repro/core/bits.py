@@ -1,0 +1,128 @@
+"""Bit-level helpers shared by the host (numpy) and device (jax.numpy) paths.
+
+The SiM data unit is a 64-bit slot.  JAX runs with x64 disabled, so every
+64-bit quantity is carried as a pair of little-endian ``uint32`` words
+``(lo, hi)`` on both paths; helpers here convert between Python ints, word
+pairs, byte views and packed bitmaps.
+
+All mixing/packing functions take an ``xp`` module argument so the exact same
+code serves as the numpy host implementation and the jnp oracle used to
+validate the Pallas kernels.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+U32_MASK = 0xFFFFFFFF
+U64_MASK = 0xFFFFFFFFFFFFFFFF
+
+# Slot / page geometry (paper §III-A: 4 KiB page = 512 slots of 8 B; 8 slots
+# = one 64 B chunk; 64 chunks per page).
+SLOT_BYTES = 8
+SLOTS_PER_PAGE = 512
+SLOTS_PER_CHUNK = 8
+CHUNKS_PER_PAGE = SLOTS_PER_PAGE // SLOTS_PER_CHUNK  # 64
+CHUNK_BYTES = SLOT_BYTES * SLOTS_PER_CHUNK           # 64
+PAGE_BYTES = SLOT_BYTES * SLOTS_PER_PAGE             # 4096
+BITMAP_WORDS = SLOTS_PER_PAGE // 32                  # 16 x uint32 = 64 B
+
+
+def u64_to_pair(value: int) -> tuple[int, int]:
+    """Split a Python int (treated as uint64) into (lo, hi) uint32 ints."""
+    value &= U64_MASK
+    return value & U32_MASK, (value >> 32) & U32_MASK
+
+
+def pair_to_u64(lo: int, hi: int) -> int:
+    return ((int(hi) & U32_MASK) << 32) | (int(lo) & U32_MASK)
+
+
+def u64_array_to_pairs(values: np.ndarray) -> np.ndarray:
+    """(N,) uint64 -> (N, 2) uint32 little-endian word pairs."""
+    v = np.asarray(values, dtype=np.uint64)
+    return v.view(np.uint32).reshape(*v.shape, 2)
+
+
+def pairs_to_u64_array(pairs: np.ndarray) -> np.ndarray:
+    p = np.ascontiguousarray(pairs, dtype=np.uint32)
+    return p.view(np.uint64).reshape(p.shape[:-1])
+
+
+def bytes_to_slot_words(page_bytes: np.ndarray) -> np.ndarray:
+    """(..., 4096) uint8 -> (..., 512, 2) uint32 slot word pairs (LE)."""
+    b = np.ascontiguousarray(page_bytes, dtype=np.uint8)
+    assert b.shape[-1] % SLOT_BYTES == 0
+    n_slots = b.shape[-1] // SLOT_BYTES
+    return b.view('<u4').reshape(*b.shape[:-1], n_slots, 2)
+
+
+def slot_words_to_bytes(words: np.ndarray) -> np.ndarray:
+    w = np.ascontiguousarray(words, dtype=np.uint32)
+    return w.view(np.uint8).reshape(*w.shape[:-2], w.shape[-2] * SLOT_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# 32-bit mixers (murmur3 fmix32 and a two-round xorshift-mult) used for the
+# per-chunk data randomization streams (paper §IV-C1).  Pure uint32 math so
+# they run identically under numpy and jnp.
+# ---------------------------------------------------------------------------
+
+def fmix32(x, xp=np):
+    x = xp.asarray(x, dtype=xp.uint32)
+    c1 = xp.uint32(0x85EBCA6B)
+    c2 = xp.uint32(0xC2B2AE35)
+    x = x ^ (x >> xp.uint32(16))
+    x = (x * c1).astype(xp.uint32)
+    x = x ^ (x >> xp.uint32(13))
+    x = (x * c2).astype(xp.uint32)
+    x = x ^ (x >> xp.uint32(16))
+    return x
+
+
+def mix2_32(x, salt, xp=np):
+    """Two fmix rounds with a salt between them; decorrelates lo/hi streams."""
+    x = fmix32(x, xp)
+    x = x ^ xp.uint32(salt)
+    return fmix32(x, xp)
+
+
+# ---------------------------------------------------------------------------
+# Bitmap packing: (..., 512) {0,1} -> (..., 16) uint32.  Bit i of word w is
+# slot 32*w + i (little-endian within word), matching the byte order the chip
+# would put on the bus.
+# ---------------------------------------------------------------------------
+
+def pack_bitmap(bits, xp=np):
+    bits = xp.asarray(bits)
+    n = bits.shape[-1]
+    assert n % 32 == 0, n
+    b = bits.astype(xp.uint32).reshape(*bits.shape[:-1], n // 32, 32)
+    shifts = xp.arange(32, dtype=xp.uint32)
+    return (b << shifts).sum(axis=-1).astype(xp.uint32)
+
+
+def unpack_bitmap(words, n_bits: int | None = None, xp=np):
+    words = xp.asarray(words, dtype=xp.uint32)
+    shifts = xp.arange(32, dtype=xp.uint32)
+    bits = (words[..., None] >> shifts) & xp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * 32)
+    if n_bits is not None:
+        bits = bits[..., :n_bits]
+    return bits.astype(xp.uint32)
+
+
+def popcount_words(words: np.ndarray) -> np.ndarray:
+    """Population count over trailing word axis -> int32 counts."""
+    return unpack_bitmap(words, xp=np).sum(axis=-1).astype(np.int32)
+
+
+def chunk_bitmap_from_slot_bitmap(slot_words, xp=np):
+    """Reduce a 512-bit slot bitmap to a 64-bit chunk-select bitmap (2 words).
+
+    A chunk is selected when any of its 8 slots matched — this is what feeds
+    the gather command after a search (paper §III-B).
+    """
+    bits = unpack_bitmap(slot_words, xp=xp)                    # (..., 512)
+    s = bits.reshape(*bits.shape[:-1], CHUNKS_PER_PAGE, SLOTS_PER_CHUNK)
+    chunk_bits = (s.sum(axis=-1) > 0).astype(xp.uint32)        # (..., 64)
+    return pack_bitmap(chunk_bits, xp=xp)                      # (..., 2)

@@ -1,0 +1,87 @@
+"""The SiM SIMD command ISA (paper §III-B) as host-side datatypes.
+
+These are deliberately dumb — the RISC philosophy of the paper: complex index
+operations are decomposed in software into sequences of these four commands.
+The engine (engine.py) executes them functionally; the SSD simulator
+(flash/ssd.py) executes them in time/energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+from .bits import u64_to_pair
+
+
+class Op(enum.Enum):
+    PAGE_OPEN = "page_open"
+    PAGE_CLOSE = "page_close"
+    SEARCH = "search"
+    GATHER = "gather"
+    READ_FULL = "read_full"     # storage-mode full-page read (baseline path)
+    PROGRAM = "program"         # storage-mode page program
+    ERASE = "erase"
+
+
+@dataclasses.dataclass
+class Command:
+    op: Op
+    page_addr: int
+    # search operands
+    query: tuple[int, int] | None = None    # (lo, hi) uint32 pair
+    mask: tuple[int, int] | None = None
+    # gather operand: 64-bit chunk-select bitmap as (lo, hi)
+    chunk_bitmap: tuple[int, int] | None = None
+    # scheduling metadata
+    submit_ns: int = 0
+    deadline_ns: int = 0
+    tag: int = 0          # caller correlation id
+
+    @staticmethod
+    def search(page_addr: int, query_u64: int, mask_u64: int = 0xFFFFFFFFFFFFFFFF,
+               **kw) -> "Command":
+        return Command(Op.SEARCH, page_addr, query=u64_to_pair(query_u64),
+                       mask=u64_to_pair(mask_u64), **kw)
+
+    @staticmethod
+    def gather(page_addr: int, chunk_bitmap_u64: int, **kw) -> "Command":
+        return Command(Op.GATHER, page_addr,
+                       chunk_bitmap=u64_to_pair(chunk_bitmap_u64), **kw)
+
+    @staticmethod
+    def page_open(page_addr: int, **kw) -> "Command":
+        return Command(Op.PAGE_OPEN, page_addr, **kw)
+
+    @staticmethod
+    def page_close(page_addr: int, **kw) -> "Command":
+        return Command(Op.PAGE_CLOSE, page_addr, **kw)
+
+    @staticmethod
+    def read_full(page_addr: int, **kw) -> "Command":
+        return Command(Op.READ_FULL, page_addr, **kw)
+
+    @staticmethod
+    def program(page_addr: int, **kw) -> "Command":
+        return Command(Op.PROGRAM, page_addr, **kw)
+
+
+@dataclasses.dataclass
+class SearchResponse:
+    bitmap_words: np.ndarray        # (16,) uint32 — the 64 B bus payload
+    match_count: int
+    open_verdict: str               # OpenVerdict.value of the page-open check
+
+
+@dataclasses.dataclass
+class GatherResponse:
+    chunks: np.ndarray              # (k, 64) uint8 de-randomized chunk bytes
+    chunk_ids: np.ndarray           # (k,) int
+    parity_ok: np.ndarray           # (k,) bool inner-code verdicts
+
+
+@dataclasses.dataclass
+class ReadFullResponse:
+    plain: np.ndarray               # (4096,) uint8 de-randomized page

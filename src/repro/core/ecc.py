@@ -1,0 +1,211 @@
+"""Data integrity: CRCs, the verification header, Optimistic Error Correction
+and the concatenated chunk-level code (paper §IV-C2/C3).
+
+Layout implemented here (per 4 KiB match-mode page):
+
+  chunk 0 (the *verification header* chunk, 64 B):
+    slot 0  : CRC-64 over slots 1..7 of chunk 0        (8 B)
+    slot 1  : magic number 0x5349_4D43_4849_5021        (8 B, "SIMCHIP!")
+    slot 2  : write timestamp (uint64 nanoseconds)      (8 B)
+    slots 3..7 : user metadata (B+Tree header etc.)
+
+  out-of-band area (modelled separately, as on a real chip):
+    64 x CRC-32 chunk parities  (the concatenated *inner* code)
+    1  x page-level parity + correction budget t (the *outer* code; real
+        chips use BCH/LDPC — we model a t-error-correcting code whose
+        decode succeeds iff the injected bit-error count is <= t)
+
+`page_open` transfers header+chunk0 only; the controller checks the CRC-64.
+Clean -> proceed with on-chip matching (the optimistic fast path).
+Dirty -> full-page fallback: outer-code decode, then bounded read-retries.
+Stale timestamp -> page is queued for refresh (rewrite) even when clean.
+"""
+from __future__ import annotations
+
+import dataclasses
+from enum import Enum
+
+import numpy as np
+
+from .bits import (CHUNK_BYTES, CHUNKS_PER_PAGE, PAGE_BYTES, SLOT_BYTES,
+                   bytes_to_slot_words, pair_to_u64, slot_words_to_bytes,
+                   u64_to_pair)
+
+MAGIC = 0x53494D4348495021  # "SIMCHIP!"
+HEADER_CRC_SLOT = 0
+HEADER_MAGIC_SLOT = 1
+HEADER_TIMESTAMP_SLOT = 2
+HEADER_USER_SLOTS = slice(3, 8)
+
+# --------------------------------------------------------------------------
+# Table-driven CRC-32 (Castagnoli) and CRC-64 (ECMA-182), vectorized in numpy.
+# --------------------------------------------------------------------------
+
+def _make_crc32_table(poly: int = 0x82F63B78) -> np.ndarray:
+    table = np.zeros(256, dtype=np.uint32)
+    for i in range(256):
+        crc = i
+        for _ in range(8):
+            crc = (crc >> 1) ^ (poly if crc & 1 else 0)
+        table[i] = crc
+    return table
+
+
+def _make_crc64_table(poly: int = 0xC96C5795D7870F42) -> np.ndarray:
+    table = np.zeros(256, dtype=np.uint64)
+    for i in range(256):
+        crc = i
+        for _ in range(8):
+            crc = (crc >> 1) ^ (poly if crc & 1 else 0)
+        table[i] = np.uint64(crc)
+    return table
+
+
+_CRC32_TABLE = _make_crc32_table()
+_CRC64_TABLE = _make_crc64_table()
+
+
+def crc32(data: np.ndarray | bytes) -> int:
+    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
+        data, (bytes, bytearray)) else np.asarray(data, dtype=np.uint8).ravel()
+    crc = np.uint32(0xFFFFFFFF)
+    for b in buf:
+        crc = _CRC32_TABLE[(crc ^ b) & np.uint32(0xFF)] ^ (crc >> np.uint32(8))
+    return int(crc ^ np.uint32(0xFFFFFFFF))
+
+
+def crc64(data: np.ndarray | bytes) -> int:
+    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
+        data, (bytes, bytearray)) else np.asarray(data, dtype=np.uint8).ravel()
+    crc = np.uint64(0xFFFFFFFFFFFFFFFF)
+    for b in buf:
+        crc = _CRC64_TABLE[(crc ^ np.uint64(b)) & np.uint64(0xFF)] ^ (
+            crc >> np.uint64(8))
+    return int(crc ^ np.uint64(0xFFFFFFFFFFFFFFFF))
+
+
+def crc32_chunks(page_bytes: np.ndarray) -> np.ndarray:
+    """CRC-32 of each 64 B chunk of a page -> (64,) uint32 (vectorized)."""
+    chunks = np.asarray(page_bytes, dtype=np.uint8).reshape(
+        CHUNKS_PER_PAGE, CHUNK_BYTES)
+    crc = np.full(CHUNKS_PER_PAGE, 0xFFFFFFFF, dtype=np.uint32)
+    for i in range(CHUNK_BYTES):
+        crc = _CRC32_TABLE[(crc ^ chunks[:, i]) & 0xFF] ^ (crc >> np.uint32(8))
+    return crc ^ np.uint32(0xFFFFFFFF)
+
+
+# --------------------------------------------------------------------------
+# Verification header
+# --------------------------------------------------------------------------
+
+def build_header_chunk(timestamp_ns: int,
+                       user_slots: np.ndarray | None = None) -> np.ndarray:
+    """Return the 64 B verification-header chunk as uint8."""
+    words = np.zeros((8, 2), dtype=np.uint32)
+    words[HEADER_MAGIC_SLOT] = u64_to_pair(MAGIC)
+    words[HEADER_TIMESTAMP_SLOT] = u64_to_pair(timestamp_ns)
+    if user_slots is not None:
+        u = np.asarray(user_slots, dtype=np.uint32).reshape(-1, 2)
+        words[HEADER_USER_SLOTS][:u.shape[0]] = u
+    body = slot_words_to_bytes(words[1:])          # slots 1..7
+    crc = crc64(body)
+    words[HEADER_CRC_SLOT] = u64_to_pair(crc)
+    return slot_words_to_bytes(words)
+
+
+@dataclasses.dataclass
+class Header:
+    crc: int
+    magic: int
+    timestamp_ns: int
+    user: np.ndarray  # (5, 2) uint32
+    crc_ok: bool
+    magic_ok: bool
+
+
+def parse_header_chunk(chunk_bytes: np.ndarray) -> Header:
+    words = bytes_to_slot_words(np.asarray(chunk_bytes, dtype=np.uint8))
+    crc_stored = pair_to_u64(*words[HEADER_CRC_SLOT])
+    magic = pair_to_u64(*words[HEADER_MAGIC_SLOT])
+    ts = pair_to_u64(*words[HEADER_TIMESTAMP_SLOT])
+    body = slot_words_to_bytes(words[1:])
+    return Header(
+        crc=crc_stored, magic=magic, timestamp_ns=ts,
+        user=np.array(words[HEADER_USER_SLOTS]),
+        crc_ok=(crc64(body) == crc_stored), magic_ok=(magic == MAGIC))
+
+
+# --------------------------------------------------------------------------
+# Optimistic Error Correction pipeline
+# --------------------------------------------------------------------------
+
+class OpenVerdict(Enum):
+    CLEAN = "clean"                  # fast path: match on-chip immediately
+    CLEAN_NEEDS_REFRESH = "refresh"  # clean, but older than the safety margin
+    FALLBACK_ECC = "fallback"        # CRC mismatch -> full-page outer decode
+    UNCORRECTABLE = "uncorrectable"  # outer decode failed after read-retries
+
+
+@dataclasses.dataclass
+class EccConfig:
+    t_correctable: int = 40           # outer-code budget (bits / 4 KiB page)
+    max_read_retries: int = 5         # sensing-voltage retries (paper [17])
+    refresh_margin_ns: int = int(30 * 24 * 3600 * 1e9)  # 30 days
+    retry_fix_prob: float = 0.5       # per-retry chance a marginal page reads clean
+
+
+@dataclasses.dataclass
+class OpenResult:
+    verdict: OpenVerdict
+    header: Header | None
+    retries_used: int = 0
+    bits_corrected: int = 0
+
+
+def optimistic_open(header_chunk: np.ndarray, *, now_ns: int,
+                    injected_error_bits: int, cfg: EccConfig,
+                    rng: np.random.Generator | None = None) -> OpenResult:
+    """Model the page-open decision tree of §IV-C2.
+
+    ``injected_error_bits`` is the simulator's ground-truth raw bit-error
+    count for the page (the header chunk's own errors are already reflected
+    in the bytes passed in, so the CRC check is real, not modelled).
+    """
+    header = parse_header_chunk(header_chunk)
+    if header.crc_ok and header.magic_ok:
+        if now_ns - header.timestamp_ns > cfg.refresh_margin_ns:
+            return OpenResult(OpenVerdict.CLEAN_NEEDS_REFRESH, header)
+        return OpenResult(OpenVerdict.CLEAN, header)
+
+    # Fallback: full page is read out, outer code decodes.
+    if injected_error_bits <= cfg.t_correctable:
+        return OpenResult(OpenVerdict.FALLBACK_ECC, header,
+                          bits_corrected=injected_error_bits)
+
+    # Read-retry loop with adjusted sensing voltage; the magic number gives
+    # the controller a known-plaintext anchor for calibrating the retry.
+    rng = rng or np.random.default_rng(0)
+    for attempt in range(1, cfg.max_read_retries + 1):
+        if rng.random() < cfg.retry_fix_prob:
+            return OpenResult(OpenVerdict.FALLBACK_ECC, header,
+                              retries_used=attempt,
+                              bits_corrected=cfg.t_correctable)
+    return OpenResult(OpenVerdict.UNCORRECTABLE, header,
+                      retries_used=cfg.max_read_retries)
+
+
+# --------------------------------------------------------------------------
+# Concatenated chunk-level code (inner CRC-32 per chunk)
+# --------------------------------------------------------------------------
+
+def build_chunk_parities(page_bytes: np.ndarray) -> np.ndarray:
+    """(64,) uint32 inner-code parities stored out-of-band with the page."""
+    return crc32_chunks(page_bytes)
+
+
+def verify_chunks(page_bytes: np.ndarray, parities: np.ndarray,
+                  chunk_ids: np.ndarray) -> np.ndarray:
+    """Check selected chunks against their stored parities -> (k,) bool."""
+    fresh = crc32_chunks(page_bytes)
+    chunk_ids = np.asarray(chunk_ids, dtype=np.int64)
+    return fresh[chunk_ids] == np.asarray(parities, dtype=np.uint32)[chunk_ids]

@@ -1,0 +1,57 @@
+"""The matching semantics of the SiM chip, defined once.
+
+This is the *specification* both the numpy host engine and the Pallas TPU
+kernels implement: a masked 64-bit equality test per 8-byte slot.
+
+    match[s] = (((slot_lo[s] ^ q_lo) & m_lo) | ((slot_hi[s] ^ q_hi) & m_hi)) == 0
+
+A set mask bit means "compare this bit position"; cleared bits are
+"don't care" (paper §III-B).  The all-zero mask therefore matches *every*
+slot — the degenerate full-page select used by redistribution (§V-D).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .bits import pack_bitmap, chunk_bitmap_from_slot_bitmap
+
+
+def match_slots(slot_words, query_pair, mask_pair, xp=np):
+    """(..., S, 2) uint32 x (2,) x (2,) -> (..., S) uint32 {0,1} match bits."""
+    w = xp.asarray(slot_words, dtype=xp.uint32)
+    q = xp.asarray(query_pair, dtype=xp.uint32)
+    m = xp.asarray(mask_pair, dtype=xp.uint32)
+    mismatch = ((w[..., 0] ^ q[..., 0]) & m[..., 0]) | (
+        (w[..., 1] ^ q[..., 1]) & m[..., 1])
+    return (mismatch == 0).astype(xp.uint32)
+
+
+def search_page(slot_words, query_pair, mask_pair, xp=np):
+    """Full search command semantics: packed (..., 16) uint32 slot bitmap."""
+    return pack_bitmap(match_slots(slot_words, query_pair, mask_pair, xp), xp)
+
+
+def search_to_chunk_bitmap(slot_words, query_pair, mask_pair, xp=np):
+    """search + slot->chunk reduction: (..., 2) uint32 chunk-select bitmap."""
+    bitmap = search_page(slot_words, query_pair, mask_pair, xp)
+    return chunk_bitmap_from_slot_bitmap(bitmap, xp)
+
+
+def gather_chunks(page_chunks, chunk_bitmap_words, max_out: int, xp=np):
+    """Gather command semantics (order-preserving compaction).
+
+    page_chunks: (64, CB) chunk-major page content (any dtype)
+    chunk_bitmap_words: (2,) uint32 chunk-select bitmap
+    Returns (out, count): out (max_out, CB) with selected chunks packed to the
+    front (tail zero-filled), count = number selected.
+    """
+    from .bits import unpack_bitmap  # local to avoid cycle at import time
+    bits = unpack_bitmap(xp.asarray(chunk_bitmap_words, dtype=xp.uint32),
+                         n_bits=page_chunks.shape[0], xp=xp)
+    positions = xp.cumsum(bits) - bits          # output slot for each chunk
+    onehot = (
+        (positions[None, :] == xp.arange(max_out)[:, None]) & (bits[None, :] == 1)
+    ).astype(page_chunks.dtype)                 # (max_out, 64)
+    out = onehot @ page_chunks                  # MXU-style one-hot gather
+    count = bits.sum().astype(xp.int32)
+    return out, count

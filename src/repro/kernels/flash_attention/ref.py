@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel (dense softmax attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None, logits_dtype=jnp.float32):
+    """Dense reference attention with GQA + causal / sliding-window masks.
+
+    q: (B, Sq, H, D);  k, v: (B, Sk, Hkv, D) with H % Hkv == 0.
+    ``window`` w keeps keys with  row - w < col <= row  (w most recent).
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = h // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(logits_dtype),
+                   kx.astype(logits_dtype)) * scale
+    row = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-style)
+    col = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(logits_dtype))
+    return out.astype(q.dtype)

@@ -1,0 +1,51 @@
+"""Host-side layout conversions between SiM page bytes and kernel operands.
+
+TPU lane tiling wants the trailing axis to be a multiple of 128.  The
+interleaved on-flash slot layout ``(N, 512, 2)`` puts 2 in the lanes, which
+is hostile; we de-interleave pages into two word *planes* of shape
+``(N, 512)`` (lo words, hi words) — 512 lanes = 4 x 128.  This mirrors the
+chip, where the two words of a slot live on different bitline groups anyway.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bits import bytes_to_slot_words, slot_words_to_bytes
+
+SLOTS = 512
+CHUNKS = 64
+WORDS_PER_CHUNK = 16   # 64 B / 4 B
+
+
+def pages_to_planes(pages_bytes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(N, 4096) uint8 -> ((N, 512) lo, (N, 512) hi) uint32 planes."""
+    words = bytes_to_slot_words(np.asarray(pages_bytes, dtype=np.uint8))
+    return np.ascontiguousarray(words[..., 0]), np.ascontiguousarray(
+        words[..., 1])
+
+
+def planes_to_pages(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    words = np.stack([lo, hi], axis=-1).astype(np.uint32)
+    return slot_words_to_bytes(words)
+
+
+def pages_to_chunk_words(pages_bytes: np.ndarray) -> np.ndarray:
+    """(N, 4096) uint8 -> (N, 64, 16) uint32 chunk-major word view."""
+    b = np.ascontiguousarray(np.asarray(pages_bytes, dtype=np.uint8))
+    return b.view('<u4').reshape(*b.shape[:-1], CHUNKS, WORDS_PER_CHUNK)
+
+
+def chunk_words_to_pages(cw: np.ndarray) -> np.ndarray:
+    c = np.ascontiguousarray(cw, dtype=np.uint32)
+    return c.view(np.uint8).reshape(*c.shape[:-2], c.shape[-2] * 64)
+
+
+def planes_to_chunk_words_xp(lo, hi, xp):
+    """Device-side (B, 512)+(B, 512) planes -> (B, 64, 16) chunk words.
+
+    Chunk j holds slots 8j..8j+7; its 16 words interleave lo/hi per slot.
+    """
+    B = lo.shape[0]
+    lo_c = lo.reshape(B, CHUNKS, 8)
+    hi_c = hi.reshape(B, CHUNKS, 8)
+    return xp.stack([lo_c, hi_c], axis=-1).reshape(B, CHUNKS, WORDS_PER_CHUNK)

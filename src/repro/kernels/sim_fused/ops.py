@@ -1,0 +1,36 @@
+"""Public wrapper for the fused search+gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from .ref import sim_fused_ref
+from .sim_fused import sim_fused_kernel
+
+
+def sim_fused(lo, hi, query, mask, *, max_out: int = 16,
+              page_block: int = 16, page_base: int = 0,
+              randomized: bool = False, device_seed: int = 0,
+              interpret: bool | None = None, use_kernel: bool = True):
+    """Fused single-query search+gather over page planes.
+
+    Returns (slot_bitmap (N, 16), gathered (N, max_out, 16), counts (N,)).
+    """
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    if not use_kernel:
+        return sim_fused_ref(lo, hi, query, mask, max_out=max_out,
+                             randomized=randomized, page_base=page_base,
+                             device_seed=device_seed)
+    interpret = default_interpret() if interpret is None else interpret
+    n = lo.shape[0]
+    pad = (-n) % page_block
+    if pad:
+        lo = jnp.pad(lo, ((0, pad), (0, 0)))
+        hi = jnp.pad(hi, ((0, pad), (0, 0)))
+    bm, out, cnt = sim_fused_kernel(
+        lo, hi, jnp.asarray(query, jnp.uint32), jnp.asarray(mask, jnp.uint32),
+        page_base, page_block=page_block, max_out=max_out,
+        randomized=randomized, device_seed=device_seed, interpret=interpret)
+    return bm[:n], out[:n], cnt[:n, 0]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused search+gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bits import pack_bitmap
+from repro.kernels.layout import planes_to_chunk_words_xp
+from repro.kernels.sim_search.ref import stream_planes
+
+
+def sim_fused_ref(lo, hi, query, mask, *, max_out: int,
+                  randomized: bool = False, page_base: int = 0,
+                  device_seed: int = 0):
+    """Single-query search -> chunk-select -> gather, one logical page pass.
+
+    lo, hi: (N, 512) uint32 planes;  query, mask: (2,) uint32
+    Returns (slot_bitmap (N, 16) uint32, gathered (N, max_out, 16) uint32,
+             counts (N,) int32) — counts are *chunk* counts.
+    """
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    q = jnp.asarray(query, jnp.uint32)
+    m = jnp.asarray(mask, jnp.uint32)
+    n = lo.shape[0]
+    if randomized:
+        s_lo, s_hi = stream_planes(page_base, n, device_seed)
+        q_lo, q_hi = q[0] ^ s_lo, q[1] ^ s_hi
+    else:
+        q_lo, q_hi = q[0], q[1]
+    mm = ((lo ^ q_lo) & m[0]) | ((hi ^ q_hi) & m[1])
+    bits = (mm == 0).astype(jnp.uint32)                    # (N, 512)
+    slot_bitmap = pack_bitmap(bits, xp=jnp)                # (N, 16)
+
+    chunk_bits = (bits.reshape(n, 64, 8).sum(axis=2) > 0).astype(jnp.uint32)
+    pos = jnp.cumsum(chunk_bits, axis=1, dtype=jnp.uint32) - chunk_bits
+    sel = ((pos[:, None, :] == jnp.arange(max_out,
+                                          dtype=jnp.uint32)[None, :, None])
+           & (chunk_bits[:, None, :] == 1)).astype(jnp.uint32)
+    chunks = planes_to_chunk_words_xp(lo, hi, jnp)         # (N, 64, 16)
+    gathered = jnp.einsum("nmj,njw->nmw", sel, chunks).astype(jnp.uint32)
+    counts = chunk_bits.sum(axis=1).astype(jnp.int32)
+    return slot_bitmap, gathered, counts

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused SiM search + gather (single query).
+
+The paper notes a search is commonly followed immediately by a gather on the
+same page, and the chip pipelines them because the page already sits in the
+page buffers (§III-B, §V-A).  The TPU analogue is fusion: one VMEM residency
+of the page tile feeds both the match and the compaction matmul, halving HBM
+page reads for the search->gather pattern that dominates B+Tree lookups.
+
+Gathered chunks come back *randomized* when the store is randomized (the
+gather bus payload is the raw latch content); the controller/host
+de-randomizes per chunk — tests cover the round trip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bits import mix2_32
+from repro.core.randomize import _HI_SALT, _LO_SALT
+
+SLOTS = 512
+CHUNKS = 64
+WORDS = 16
+BITMAP_WORDS = 16
+
+
+def _fused_kernel(lo_ref, hi_ref, q_ref, m_ref, base_ref, bm_ref, out_ref,
+                  cnt_ref, *, page_block: int, max_out: int,
+                  randomized: bool, device_seed: int):
+    lo = lo_ref[...]                                   # (PB, 512)
+    hi = hi_ref[...]
+    q = q_ref[...]                                     # (1, 2)
+    m = m_ref[...]
+    q_lo, q_hi = q[0, 0], q[0, 1]
+    m_lo, m_hi = m[0, 0], m[0, 1]
+
+    if randomized:
+        tile = pl.program_id(0).astype(jnp.uint32)
+        page_in_tile = jax.lax.broadcasted_iota(jnp.uint32,
+                                                (page_block, SLOTS), 0)
+        slot = jax.lax.broadcasted_iota(jnp.uint32, (page_block, SLOTS), 1)
+        page = base_ref[0, 0] + tile * jnp.uint32(page_block) + page_in_tile
+        ctr = (page * jnp.uint32(SLOTS) + slot) ^ jnp.uint32(
+            device_seed & 0xFFFFFFFF)
+        q_lo = q_lo ^ mix2_32(ctr, _LO_SALT, jnp)
+        q_hi = q_hi ^ mix2_32(ctr, _HI_SALT, jnp)
+
+    mismatch = ((lo ^ q_lo) & m_lo) | ((hi ^ q_hi) & m_hi)
+    bits = (mismatch == 0).astype(jnp.uint32)          # (PB, 512)
+
+    # --- search output: packed 64 B bitmap per page
+    b = bits.reshape(page_block, BITMAP_WORDS, 32)
+    sh = jax.lax.broadcasted_iota(jnp.uint32,
+                                  (page_block, BITMAP_WORDS, 32), 2)
+    bm_ref[...] = (b << sh).sum(axis=2).astype(jnp.uint32)
+
+    # --- gather phase, reusing the resident planes
+    chunk_bits = (bits.reshape(page_block, CHUNKS, 8).sum(axis=2)
+                  > 0).astype(jnp.uint32)              # (PB, 64)
+    pos = jnp.cumsum(chunk_bits, axis=1, dtype=jnp.uint32) - chunk_bits
+    m_ids = jax.lax.broadcasted_iota(jnp.uint32,
+                                     (page_block, max_out, CHUNKS), 1)
+    sel = ((pos[:, None, :] == m_ids) & (chunk_bits[:, None, :] == 1)
+           ).astype(jnp.float32)
+
+    lo_c = lo.reshape(page_block, CHUNKS, 8)
+    hi_c = hi.reshape(page_block, CHUNKS, 8)
+    chunks = jnp.stack([lo_c, hi_c], axis=-1).reshape(
+        page_block, CHUNKS, WORDS)                     # interleaved words
+    c_lo = (chunks & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    c_hi = (chunks >> jnp.uint32(16)).astype(jnp.float32)
+    dn = (((2,), (1,)), ((0,), (0,)))
+    g_lo = jax.lax.dot_general(sel, c_lo, dn,
+                               preferred_element_type=jnp.float32)
+    g_hi = jax.lax.dot_general(sel, c_hi, dn,
+                               preferred_element_type=jnp.float32)
+    out_ref[...] = (g_lo.astype(jnp.uint32)
+                    | (g_hi.astype(jnp.uint32) << jnp.uint32(16)))
+    cnt_ref[...] = chunk_bits.sum(axis=1, dtype=jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("page_block", "max_out",
+                                             "randomized", "device_seed",
+                                             "interpret"))
+def sim_fused_kernel(lo, hi, query, mask, page_base, *, page_block: int = 16,
+                     max_out: int = 16, randomized: bool = False,
+                     device_seed: int = 0, interpret: bool = True):
+    n = lo.shape[0]
+    assert n % page_block == 0
+    kernel = functools.partial(_fused_kernel, page_block=page_block,
+                               max_out=max_out, randomized=randomized,
+                               device_seed=device_seed)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // page_block,),
+        in_specs=[
+            pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((page_block, BITMAP_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((page_block, max_out, WORDS), lambda i: (i, 0, 0)),
+            pl.BlockSpec((page_block, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, BITMAP_WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((n, max_out, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32),
+      jnp.asarray(query, jnp.uint32).reshape(1, 2),
+      jnp.asarray(mask, jnp.uint32).reshape(1, 2),
+      jnp.asarray(page_base, jnp.uint32).reshape(1, 1))

@@ -1,0 +1,38 @@
+"""Public wrapper for the SiM gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.layout import pages_to_chunk_words
+from .ref import sim_gather_ref
+from .sim_gather import sim_gather_kernel
+
+
+def sim_gather(chunks, bitmap_words, *, max_out: int = 16,
+               page_block: int = 16, interpret: bool | None = None,
+               use_kernel: bool = True):
+    """Gather selected chunks per page -> ((N, max_out, 16), (N,) counts)."""
+    chunks = jnp.asarray(chunks, jnp.uint32)
+    bm = jnp.asarray(bitmap_words, jnp.uint32)
+    if not use_kernel:
+        return sim_gather_ref(chunks, bm, max_out)
+    interpret = default_interpret() if interpret is None else interpret
+    n = chunks.shape[0]
+    pad = (-n) % page_block
+    if pad:
+        chunks = jnp.pad(chunks, ((0, pad), (0, 0), (0, 0)))
+        bm = jnp.pad(bm, ((0, pad), (0, 0)))
+    out, cnt = sim_gather_kernel(chunks, bm, page_block=page_block,
+                                 max_out=max_out, interpret=interpret)
+    return out[:n], cnt[:n, 0]
+
+
+def sim_gather_pages(pages_bytes: np.ndarray, chunk_bitmaps_u64, **kw):
+    """Raw (N, 4096) uint8 pages + per-page uint64 chunk bitmaps."""
+    from repro.core.bits import u64_array_to_pairs
+    cw = pages_to_chunk_words(pages_bytes)
+    bm = u64_array_to_pairs(np.atleast_1d(
+        np.asarray(chunk_bitmaps_u64, dtype=np.uint64)))
+    return sim_gather(cw, bm, **kw)

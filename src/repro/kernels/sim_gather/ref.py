@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the sim_gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sim_gather_ref(chunks, bitmap_words, max_out: int):
+    """Order-preserving chunk compaction per page.
+
+    chunks:       (N, 64, 16) uint32 chunk-major page words
+    bitmap_words: (N, 2) uint32 — 64-bit chunk-select bitmap per page
+    returns (gathered (N, max_out, 16) uint32, counts (N,) int32).
+    Selected chunks pack to the front in chunk order; tail is zero.
+    Chunks beyond ``max_out`` selections are dropped (counts still reports
+    the true total, so the host can re-issue a follow-up gather).
+    """
+    chunks = jnp.asarray(chunks, jnp.uint32)
+    bm = jnp.asarray(bitmap_words, jnp.uint32)
+    n = chunks.shape[0]
+    j = jnp.arange(64, dtype=jnp.uint32)[None, :]                # (1, 64)
+    word = jnp.where(j < 32, bm[:, 0:1], bm[:, 1:2])             # (N, 64)
+    bit = (word >> (j % 32)) & jnp.uint32(1)                     # (N, 64)
+    pos = jnp.cumsum(bit, axis=1, dtype=jnp.uint32) - bit        # (N, 64)
+    sel = ((pos[:, None, :] == jnp.arange(max_out,
+                                          dtype=jnp.uint32)[None, :, None])
+           & (bit[:, None, :] == 1))                             # (N, M, 64)
+    gathered = jnp.einsum("nmj,njw->nmw", sel.astype(jnp.uint32), chunks)
+    counts = bit.sum(axis=1).astype(jnp.int32)
+    return gathered.astype(jnp.uint32), counts

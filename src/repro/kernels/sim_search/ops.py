@@ -1,0 +1,54 @@
+"""Public wrapper for the SiM search kernel: layout, padding, fallback."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.layout import pages_to_planes
+from .ref import sim_search_ref
+from .sim_search import sim_search_kernel
+
+
+def _pad_pages(lo, hi, page_block):
+    n = lo.shape[0]
+    pad = (-n) % page_block
+    if pad:
+        lo = jnp.pad(lo, ((0, pad), (0, 0)))
+        hi = jnp.pad(hi, ((0, pad), (0, 0)))
+    return lo, hi, n
+
+
+def sim_search(lo, hi, queries, masks, *, page_base: int = 0,
+               page_block: int = 32, randomized: bool = False,
+               device_seed: int = 0, interpret: bool | None = None,
+               use_kernel: bool = True):
+    """Masked multi-query search over page planes -> (Q, N, 16) bitmaps.
+
+    ``use_kernel=False`` routes through the jnp oracle (the path the XLA
+    dry-run models lower; identical semantics, validated in tests).
+    """
+    queries = jnp.atleast_2d(jnp.asarray(queries, jnp.uint32))
+    masks = jnp.atleast_2d(jnp.asarray(masks, jnp.uint32))
+    if not use_kernel:
+        return sim_search_ref(lo, hi, queries, masks, randomized=randomized,
+                              page_base=page_base, device_seed=device_seed)
+    interpret = default_interpret() if interpret is None else interpret
+    lo, hi, n = _pad_pages(jnp.asarray(lo, jnp.uint32),
+                           jnp.asarray(hi, jnp.uint32), page_block)
+    out = sim_search_kernel(lo, hi, queries, masks, page_base,
+                            page_block=page_block, randomized=randomized,
+                            device_seed=device_seed, interpret=interpret)
+    return out[:, :n]
+
+
+def sim_search_pages(pages_bytes: np.ndarray, queries_u64, masks_u64,
+                     **kw):
+    """Convenience: raw (N, 4096) uint8 pages + uint64 queries/masks."""
+    from repro.core.bits import u64_array_to_pairs
+    lo, hi = pages_to_planes(pages_bytes)
+    q = u64_array_to_pairs(np.atleast_1d(np.asarray(queries_u64,
+                                                    dtype=np.uint64)))
+    m = u64_array_to_pairs(np.atleast_1d(np.asarray(masks_u64,
+                                                    dtype=np.uint64)))
+    return sim_search(lo, hi, q, m, **kw)

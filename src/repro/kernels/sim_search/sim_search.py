@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: SiM search — masked multi-query match -> packed bitmap.
+
+Hardware mapping (DESIGN.md §2):
+  * one grid step stages a tile of ``page_block`` pages (two (PB, 512) uint32
+    word planes, 4 KiB/page) from HBM into VMEM — the analogue of the NAND
+    array sense into the page buffers;
+  * the VPU evaluates the masked XOR match for *all Q queries* against the
+    resident tile — the analogue of §IV-E batch matching, amortizing the
+    page sense across queries and raising arithmetic intensity by Q;
+  * when ``randomized=True`` the kernel regenerates the per-slot
+    randomization stream *in-kernel* (two fmix32 rounds on a slot-address
+    counter) and XORs it into the broadcast query — the deserializer of
+    §IV-C1; stored pages never need de-randomizing for a search;
+  * the 512 match bits per page are packed to 16 uint32 words before leaving
+    VMEM, so HBM write traffic is 64 B/page — the same 64:1 reduction the
+    chip achieves on its bus.
+
+Block geometry: the trailing axis of both planes is 512 = 4 x 128 lanes;
+``page_block`` rides the sublane axis (multiples of 8 keep the uint32 tile
+(8, 128)-aligned).  VMEM per step ~= 2 * PB * 2 KiB + Q * PB * 2 KiB
+(match-bit intermediate), e.g. PB=32, Q=16 -> ~1.3 MiB, well under the
+~16 MiB v5e VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bits import mix2_32
+from repro.core.randomize import _HI_SALT, _LO_SALT
+
+SLOTS = 512
+BITMAP_WORDS = 16
+
+
+def _search_kernel(lo_ref, hi_ref, q_ref, m_ref, base_ref, out_ref, *,
+                   page_block: int, n_queries: int, randomized: bool,
+                   device_seed: int):
+    lo = lo_ref[...]                       # (PB, 512) uint32
+    hi = hi_ref[...]
+    q = q_ref[...]                         # (Q, 2) uint32
+    m = m_ref[...]
+    q_lo = q[:, 0][:, None, None]          # (Q, 1, 1)
+    q_hi = q[:, 1][:, None, None]
+    m_lo = m[:, 0][:, None, None]
+    m_hi = m[:, 1][:, None, None]
+
+    if randomized:
+        # Deserializer: regenerate the slot-address-counter stream in VMEM.
+        tile = pl.program_id(0).astype(jnp.uint32)
+        page_in_tile = jax.lax.broadcasted_iota(
+            jnp.uint32, (page_block, SLOTS), 0)
+        slot = jax.lax.broadcasted_iota(jnp.uint32, (page_block, SLOTS), 1)
+        page = base_ref[0, 0] + tile * jnp.uint32(page_block) + page_in_tile
+        ctr = (page * jnp.uint32(SLOTS) + slot) ^ jnp.uint32(
+            device_seed & 0xFFFFFFFF)
+        s_lo = mix2_32(ctr, _LO_SALT, jnp)         # (PB, 512)
+        s_hi = mix2_32(ctr, _HI_SALT, jnp)
+        q_lo = q_lo ^ s_lo[None]
+        q_hi = q_hi ^ s_hi[None]
+
+    mismatch = ((lo[None] ^ q_lo) & m_lo) | ((hi[None] ^ q_hi) & m_hi)
+    bits = (mismatch == 0).astype(jnp.uint32)      # (Q, PB, 512)
+
+    # In-VMEM bitmap packing: 512 bits -> 16 uint32 (the 64 B bus payload).
+    b = bits.reshape(n_queries, page_block, BITMAP_WORDS, 32)
+    sh = jax.lax.broadcasted_iota(
+        jnp.uint32, (n_queries, page_block, BITMAP_WORDS, 32), 3)
+    out_ref[...] = (b << sh).sum(axis=3).astype(jnp.uint32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("page_block", "randomized", "device_seed", "interpret"))
+def sim_search_kernel(lo, hi, queries, masks, page_base, *,
+                      page_block: int = 32, randomized: bool = False,
+                      device_seed: int = 0, interpret: bool = True):
+    """Run the search kernel.
+
+    lo, hi:    (N, 512) uint32 planes, N a multiple of ``page_block``
+               (ops.py pads)
+    queries:   (Q, 2) uint32;  masks: (Q, 2) uint32
+    page_base: scalar uint32 — global index of page 0 (randomization seed)
+    returns:   (Q, N, 16) uint32 packed match bitmaps
+    """
+    n_pages = lo.shape[0]
+    n_queries = queries.shape[0]
+    assert n_pages % page_block == 0, (n_pages, page_block)
+    grid = (n_pages // page_block,)
+
+    kernel = functools.partial(
+        _search_kernel, page_block=page_block, n_queries=n_queries,
+        randomized=randomized, device_seed=device_seed)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((n_queries, 2), lambda i: (0, 0)),
+            pl.BlockSpec((n_queries, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_queries, page_block, BITMAP_WORDS),
+                               lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_queries, n_pages, BITMAP_WORDS),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32),
+      jnp.asarray(queries, jnp.uint32), jnp.asarray(masks, jnp.uint32),
+      jnp.asarray(page_base, jnp.uint32).reshape(1, 1))

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first initialization).  Everything else follows.
+# (No ``from __future__ import annotations`` here for the same reason —
+# it would have to precede the XLA_FLAGS lines.)
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins (no allocation), jits
+the train/prefill/decode step with explicit in/out shardings on the
+production mesh, compiles, and records:
+
+  * memory_analysis()  — per-device buffer sizes (fits/doesn't fit)
+  * cost_analysis()    — FLOPs / bytes for the §Roofline terms
+  * the collective mix parsed from the partitioned HLO
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_cells
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops
+from repro.models.config import InputShape, ModelConfig
+from repro.parallel.sharding import block_compute_shardings, replicated
+from repro.serve.serve_step import serve_decode_step, serve_prefill
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                    # CPU backend
+        return {"unavailable": str(e)}
+    if ma is None:
+        return {"unavailable": "None"}
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes", "host_output_size_in_bytes",
+                  "host_temp_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out
+
+
+def lower_cell(cfg: ModelConfig, shape: InputShape, mesh,
+               opt_cfg: AdamWConfig | None = None,
+               variant_tag: str = "baseline"):
+    """Build + lower + compile one cell; returns (compiled, report dict)."""
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.optimizer_dtype)
+    t0 = time.time()
+    sharding_report: list = []
+    params_sds, axes = S.param_specs(cfg)
+    p_sh = S.param_shardings(cfg, mesh, axes, params_sds,
+                             report=sharding_report)
+
+    if shape.mode == "train":
+        opt_sds = S.opt_specs(cfg, params_sds, opt_cfg)
+        o_sh = S.opt_shardings(p_sh, opt_sds, mesh)
+        b_sds = S.batch_specs(cfg, shape)
+        b_sh = S.batch_shardings(cfg, shape, mesh)
+        block_specs = None
+        if cfg.fsdp and cfg.family != "ssm":
+            block_specs = block_compute_shardings(
+                params_sds["blocks"], axes["blocks"], mesh)
+        act_spec = S.act_sharding(cfg, shape, mesh)
+        step = make_train_step(cfg, opt_cfg, block_specs=block_specs,
+                               act_spec=act_spec)
+        metrics_sh = {"loss": replicated(mesh), "aux_loss": replicated(mesh),
+                      "grad_norm": replicated(mesh), "lr": replicated(mesh)}
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, metrics_sh))
+        with mesh:
+            lowered = jitted.lower(params_sds, opt_sds, b_sds)
+
+    elif shape.mode == "prefill":
+        b_sds = S.batch_specs(cfg, shape)
+        b_sh = S.batch_shardings(cfg, shape, mesh)
+
+        act_spec = S.act_sharding(cfg, shape, mesh)
+
+        def fn(params, tokens, frontend):
+            return serve_prefill(params, cfg, tokens, shape.seq_len,
+                                 frontend_embeds=frontend,
+                                 act_spec=act_spec)
+
+        fe_sds = b_sds.get("frontend")
+        fe_sh = b_sh.get("frontend")
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["tokens"], fe_sh))
+        with mesh:
+            lowered = jitted.lower(params_sds, b_sds["tokens"], fe_sds)
+
+    else:  # decode
+        c_sds = S.cache_specs(cfg, shape)
+        c_sh = S.cache_shardings(cfg, shape, mesh, c_sds)
+        b_sh = S.batch_shardings(cfg, shape, mesh)
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        enc_sds = S.enc_out_spec(cfg, shape)
+        enc_sh = b_sh["tokens"] if enc_sds is not None else None
+
+        act_spec = S.act_sharding(cfg, shape, mesh)
+
+        def fn(params, caches, token, index, enc_out):
+            return serve_decode_step(params, cfg, token, caches, index,
+                                     enc_out=enc_out, act_spec=act_spec)
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, b_sh["tokens"], replicated(mesh),
+                          enc_sh),
+            out_shardings=(b_sh["tokens"], b_sh["tokens"], c_sh))
+        with mesh:
+            lowered = jitted.lower(params_sds, c_sds, tok_sds, idx_sds,
+                                   enc_sds)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    n_dev = mesh.devices.size
+    rl = analyze(compiled, n_dev)
+    mflops = model_flops(cfg, shape)
+    mflops_dev = mflops / n_dev
+    report = {
+        "arch": cfg.name, "shape": shape.name, "mode": shape.mode,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": n_dev,
+        "variant": variant_tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": _mem_analysis(compiled),
+        "roofline": rl.to_dict(),
+        "model_flops_global": mflops,
+        "model_flops_per_dev": mflops_dev,
+        "useful_flops_ratio": (mflops_dev / rl.flops) if rl.flops else 0.0,
+        "roofline_fraction": rl.roofline_fraction(mflops_dev),
+        "replicated_dims": [
+            {"logical": l, "size": s, "axis": str(a)}
+            for l, s, a in sharding_report],
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return compiled, report
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "baseline", out_dir: Path = OUT_DIR) -> dict:
+    cfg = get_config(arch)
+    cfg = apply_variant(cfg, variant)
+    cell = shape_cells(cfg)[shape_name]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}" + (
+        "" if variant == "baseline" else f"__{variant}")
+    path = out_dir / f"{tag}.json"
+    if cell is None:
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "variant": variant, "skipped":
+                  "full-attention arch at 500k context (DESIGN.md §4)"}
+        path.write_text(json.dumps(report, indent=2))
+        print(f"[dryrun] SKIP {tag}")
+        return report
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        _, report = lower_cell(cfg, cell, mesh, variant_tag=variant)
+        report["status"] = "ok"
+    except Exception as e:
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "variant": variant, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    path.write_text(json.dumps(report, indent=2))
+    status = report.get("status")
+    extra = "" if status != "ok" else (
+        f" dominant={report['roofline']['dominant']}"
+        f" frac={report['roofline_fraction']:.3f}"
+        f" compile={report['compile_s']}s")
+    print(f"[dryrun] {status.upper()} {tag}{extra}", flush=True)
+    return report
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """Named perf variants used by the §Perf hillclimb."""
+    if variant == "baseline":
+        return cfg
+    mods = {}
+    for piece in variant.split("+"):
+        if piece == "noremat":
+            mods["remat"] = "none"
+        elif piece == "fullremat":
+            mods["remat"] = "full"
+        elif piece == "nofsdp":
+            mods["fsdp"] = False
+        elif piece.startswith("mb"):
+            pass     # microbatches handled by the caller
+        else:
+            raise ValueError(f"unknown variant piece {piece!r}")
+    return dataclasses.replace(cfg, **mods)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", type=str, default="baseline")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = sorted(ARCHS) if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rep = run_cell(arch, shape_name, mesh_kind, args.variant)
+                if rep.get("status") == "error":
+                    failures += 1
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

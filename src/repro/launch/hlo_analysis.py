@@ -1,0 +1,273 @@
+"""Post-SPMD HLO text analyzer with loop-trip multipliers.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop *body once* (verified
+in tests/test_roofline.py), which under-counts scan-over-layers models by a
+factor of n_layers, and the optimized-HLO text prints collective operands
+without inline types.  This module parses the HLO text into computations,
+resolves every instruction's shape, extracts while-loop trip counts from
+their condition computations, and propagates multipliers:
+
+    entry x1;  while body/cond x trip;  fusion / call / to_apply: inherit.
+
+Per-cell outputs:
+  * dot_flops        — 2 * result_elems * contracted_elems, trip-scaled
+  * result_bytes     — sum of non-fusion instruction result sizes (an HBM
+                       materialization proxy), trip-scaled
+  * collective bytes — per kind (all-reduce / all-gather / reduce-scatter /
+                       all-to-all / collective-permute), operand bytes,
+                       trip-scaled
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s*([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_elems_and_dims(type_str: str) -> tuple[int, list[int]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    n = 1
+    for d in dims:
+        n *= d
+    return n, dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str               # text after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list
+
+    def instr_map(self):
+        return {i.name: i for i in self.instrs}
+
+
+def parse_computations(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):            # computation header / close
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), bool(m.group(1)), [])
+                comps[cur.name] = cur
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if mi:
+            cur.instrs.append(Instr(mi.group(1), mi.group(2), mi.group(3),
+                                    mi.group(4)))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan/fori conditions compare an induction var to a constant."""
+    best = 1
+    for i in cond.instrs:
+        if i.op == "constant" and i.type_str.startswith(("s32", "u32",
+                                                         "s64", "u64")):
+            m = re.match(r"([0-9]+)\)?", i.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_CALL_REFS = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCH_REFS = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class Analysis:
+    dot_flops: float
+    result_bytes: float
+    collective_bytes: dict
+    while_trips: list
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def analyze_hlo(hlo_text: str) -> Analysis:
+    comps = parse_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return Analysis(0.0, 0.0, {k: 0 for k in COLLECTIVES}, [])
+
+    # computation -> effective multiplier (max over call paths)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    trips: list = []
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(20):
+        changed = False
+        for comp in comps.values():
+            m_here = mult[comp.name]
+            if m_here == 0.0:
+                continue
+            for ins in comp.instrs:
+                refs = _CALL_REFS.findall(ins.rest)
+                branches = _BRANCH_REFS.findall(ins.rest)
+                for b in branches:
+                    refs.extend(_OPERAND.findall(b))
+                if ins.op == "while":
+                    body_cond = dict(re.findall(
+                        r"(body|condition)=%?([\w\.\-]+)", ins.rest))
+                    mcfg = _TRIP_CFG.search(ins.rest)
+                    if mcfg:
+                        trip = int(mcfg.group(1))
+                    else:
+                        cond_name = body_cond.get("condition")
+                        trip = _trip_count(comps[cond_name]) \
+                            if cond_name in comps else 1
+                    for r in body_cond.values():
+                        if r in comps and mult[r] < m_here * trip:
+                            mult[r] = m_here * trip
+                            changed = True
+                else:
+                    for r in refs:
+                        if r in comps and mult[r] < m_here:
+                            mult[r] = m_here
+                            changed = True
+        if not changed:
+            break
+
+    dot_flops = 0.0
+    result_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    fusion_comps = {r for c in comps.values() for i in c.instrs
+                    if i.op == "fusion"
+                    for r in _CALL_REFS.findall(i.rest)}
+    # In-place update accounting: a fusion whose root is a
+    # dynamic-update-slice aliases its operand on TPU — the HBM traffic is
+    # the *update slice*, not the whole carried buffer (scan-carried remat
+    # stashes would otherwise dominate the memory term spuriously).
+    dus_update_bytes: dict[str, int] = {}
+    for c in comps.values():
+        if not c.instrs:
+            continue
+        root = c.instrs[-1]
+        dus = [i for i in c.instrs if i.op == "dynamic-update-slice"]
+        # A fusion whose root (possibly through converts/bitcasts) is a DUS
+        # over a same-shaped carried buffer aliases in place on TPU; count
+        # the update operand, not the buffer.  (XLA:CPU wraps these in
+        # whole-buffer f32<->bf16 converts — a backend artifact.)
+        if dus and _shape_bytes(root.type_str) and len(dus) == 1:
+            root_elems, _ = _result_elems_and_dims(root.type_str)
+            dus_elems, _ = _result_elems_and_dims(dus[0].type_str)
+            if root_elems == dus_elems:
+                symbols = {i.name: i.type_str for i in c.instrs}
+                ops = _OPERAND.findall(dus[0].rest.split(")")[0])
+                if len(ops) >= 2:
+                    dus_update_bytes[c.name] = _shape_bytes(
+                        symbols.get(ops[1], ""))
+
+    for comp in comps.values():
+        m_here = mult[comp.name]
+        if m_here == 0.0:
+            continue
+        symbols = {i.name: i.type_str for i in comp.instrs}
+        is_fusion = comp.name in fusion_comps
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                n_out, _ = _result_elems_and_dims(ins.type_str)
+                ops = _OPERAND.findall(ins.rest.split(")")[0])
+                lhs_type = symbols.get(ops[0]) if ops else None
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                                  ins.rest)
+                contracted = 1
+                if lhs_type and cdims and cdims.group(1):
+                    _, ldims = _result_elems_and_dims(lhs_type)
+                    for ci in cdims.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ldims):
+                            contracted *= ldims[ci]
+                dot_flops += m_here * 2.0 * n_out * contracted
+            base_op = ins.op
+            for kind in COLLECTIVES:
+                if base_op == kind or base_op == kind + "-start":
+                    arg_names = _OPERAND.findall(ins.rest.split("),")[0])
+                    b = sum(_shape_bytes(symbols.get(a, "")) for a in
+                            arg_names)
+                    if b == 0:       # operands may live outside (params)
+                        b = _shape_bytes(ins.type_str)
+                    coll[kind] += m_here * b
+                    break
+            if not is_fusion and ins.op not in ("parameter", "constant",
+                                                "get-tuple-element",
+                                                "tuple", "bitcast"):
+                b = _shape_bytes(ins.type_str)
+                if ins.op == "fusion":
+                    called = _CALL_REFS.findall(ins.rest)
+                    if called and called[0] in dus_update_bytes:
+                        b = dus_update_bytes[called[0]]
+                elif ins.op == "dynamic-update-slice":
+                    ops_ = _OPERAND.findall(ins.rest.split(")")[0])
+                    if len(ops_) >= 2:
+                        b = _shape_bytes(symbols.get(ops_[1], "")) or b
+                result_bytes += m_here * b
+        if comp.name != entry.name:
+            continue
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "while" and mult[comp.name] > 0:
+                mcfg = _TRIP_CFG.search(ins.rest)
+                if mcfg:
+                    trips.append(int(mcfg.group(1)))
+                    continue
+                bc = dict(re.findall(r"(body|condition)=%?([\w\.\-]+)",
+                                     ins.rest))
+                cn = bc.get("condition")
+                if cn in comps:
+                    trips.append(_trip_count(comps[cn]))
+    return Analysis(dot_flops=dot_flops, result_bytes=result_bytes,
+                    collective_bytes=coll, while_trips=sorted(trips,
+                                                              reverse=True))

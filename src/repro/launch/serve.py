@@ -1,0 +1,67 @@
+"""Serving driver: continuous batching over a reduced model on CPU, the
+full config on a pod.  ``--paged`` routes the KV cache through the
+SiM-paged block table (the paper's technique in the serving path).
+
+  python -m repro.launch.serve --arch qwen3-4b --requests 8 --paged
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import init_model
+from repro.serve.batching import Request, ServeEngine
+from repro.serve.kvcache import SimPagedKVCache
+
+
+def serve(arch: str, *, n_requests: int = 8, reduced: bool = True,
+          paged: bool = False, max_slots: int = 4, cache_len: int = 128,
+          seed: int = 0, verbose: bool = True):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+    params, _ = init_model(jax.random.PRNGKey(seed), cfg)
+    paged_cache = None
+    if paged:
+        paged_cache = SimPagedKVCache(cfg, n_pages=256, page_tokens=16)
+    engine = ServeEngine(params, cfg, max_slots=max_slots,
+                         cache_len=cache_len, paged_cache=paged_cache)
+    rng = np.random.default_rng(seed)
+    for rid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(4, 17)).tolist()
+        engine.submit(Request(req_id=rid, prompt=prompt,
+                              max_new_tokens=int(rng.integers(4, 13))))
+    t0 = time.perf_counter()
+    completions = engine.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(c.tokens) for c in completions)
+    if verbose:
+        print(f"[serve] {len(completions)} requests, {total_tokens} tokens "
+              f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s, "
+              f"{engine.steps} engine steps)")
+        if paged_cache is not None:
+            s = paged_cache.stats
+            print(f"[serve] SiM block table: {s.searches} searches, "
+                  f"{s.programs} programs, {s.pages_allocated} pages alloc, "
+                  f"{s.pages_freed} freed")
+    return completions, engine, paged_cache
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    serve(args.arch, n_requests=args.requests, paged=args.paged,
+          max_slots=args.slots)
+
+
+if __name__ == "__main__":
+    main()

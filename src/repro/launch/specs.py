@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every dry-run cell.
+
+No device allocation happens here: parameters, optimizer state and caches
+are produced with ``jax.eval_shape`` over the real constructors, so the
+specs can never drift from the code that builds the live objects.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import InputShape, ModelConfig
+from repro.models.model import init_model, make_caches
+from repro.parallel.sharding import (batch_sharding, data_axes, replicated,
+                                     shardings_for_tree, spec_for)
+from repro.train.optimizer import AdamWConfig, init_opt_state
+
+
+# ---------------------------------------------------------------- params
+
+def param_specs(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical axes tree) without allocation.
+
+    The axes tree is plain strings (not a JAX type), so it is captured via a
+    side channel while eval_shape abstracts the arrays.
+    """
+    captured = {}
+
+    def build():
+        p, a = init_model(jax.random.PRNGKey(0), cfg)
+        captured["axes"] = a
+        return p
+
+    sds = jax.eval_shape(build)
+    return sds, captured["axes"]
+
+
+def param_shardings(cfg: ModelConfig, mesh, axes, params_sds,
+                    report=None):
+    return shardings_for_tree(params_sds, axes, mesh, fsdp=cfg.fsdp,
+                              report=report)
+
+
+def opt_specs(cfg: ModelConfig, params_sds, opt_cfg: AdamWConfig):
+    return jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), params_sds)
+
+
+def opt_shardings(param_shards, opt_sds, mesh):
+    return {"m": param_shards, "v": param_shards,
+            "step": replicated(mesh)}
+
+
+# ---------------------------------------------------------------- batches
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), dt)
+    elif cfg.frontend == "audio_stub":
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), dt)
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh):
+    bsh = batch_sharding(mesh)
+    axes = data_axes(mesh)
+    dsize = 1
+    for a in axes:
+        dsize *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if shape.global_batch % dsize != 0:       # e.g. long_500k's batch=1
+        bsh = replicated(mesh)
+    out = {"tokens": bsh, "labels": bsh}
+    if cfg.frontend is not None:
+        out["frontend"] = bsh
+    return out
+
+
+# ----------------------------------------------------------------- caches
+
+CACHE_AXES = {
+    "kv": (("layers", "batch", "kv_seq", "kv_heads", "head_dim"),) * 2,
+    "mamba": (("layers", "batch", "mlp", None),
+              ("layers", "batch", None, "mlp")),
+    # xlstm recurrent states: (m_state C/n/m, s_state c/n/h/m)
+    "states": (
+        ((None, None, "batch", "heads", None, None),
+         (None, None, "batch", "heads", None),
+         (None, None, "batch", "heads")),
+        ((None, "batch", "mlp"), (None, "batch", "mlp"),
+         (None, "batch", "mlp"), (None, "batch", "mlp")),
+    ),
+}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    return jax.eval_shape(partial(make_caches, cfg, b, shape.seq_len))
+
+
+def cache_shardings(cfg: ModelConfig, shape: InputShape, mesh, caches_sds):
+    axes_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= axes_sizes[a]
+    batch_ok = shape.global_batch % dsize == 0
+
+    def one(path, leaf):
+        key = path[0].key
+        ax_group = CACHE_AXES[key]
+        node = ax_group
+        for k in path[1:]:
+            node = node[k.idx]
+        ax = list(node)
+        if not batch_ok:
+            ax = [None if a == "batch" else a for a in ax]
+        return NamedSharding(
+            mesh, spec_for(tuple(leaf.shape), tuple(ax), mesh,
+                           fsdp=cfg.fsdp))
+    return jax.tree_util.tree_map_with_path(one, caches_sds)
+
+
+def act_sharding(cfg: ModelConfig, shape: InputShape, mesh):
+    """(B, S, D) activation sharding: batch over (pod, data), D unsharded
+    (tensor axes live in heads/mlp dims).  None batch axis when the cell's
+    batch does not divide the data product (long_500k's B=1)."""
+    axes_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= axes_sizes[a]
+    if shape.global_batch % dsize != 0:
+        return NamedSharding(mesh, P())
+    first = daxes if len(daxes) > 1 else daxes[0]
+    return NamedSharding(mesh, P(first, None, None))
+
+
+def enc_out_spec(cfg: ModelConfig, shape: InputShape):
+    if not cfg.encoder_layers:
+        return None
+    return jax.ShapeDtypeStruct(
+        (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+        jnp.dtype(cfg.dtype))

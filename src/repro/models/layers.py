@@ -1,0 +1,236 @@
+"""Core layers: norms, RoPE, GQA attention (train/prefill/decode), SwiGLU.
+
+Functional style: ``init_*`` returns ``(params, axes)`` where ``axes`` is a
+matching pytree of logical-axis tuples consumed by parallel/sharding.py.
+Layer-stacked weights carry a leading ``layers`` axis and are consumed by
+``jax.lax.scan`` so compile time is depth-independent.
+
+dtype policy: parameters in cfg.dtype (bf16 by default); norms, softmax,
+router logits and losses in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------- init
+
+def _dense_init(key, shape, fan_in: int, dtype):
+    """Truncated-normal init scaled by 1/sqrt(fan_in)."""
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def head_pad_mask(cfg: ModelConfig, xp=jnp):
+    """(padded_heads,) 1/0 mask — real vs zero-padded q heads, laid out
+    per KV group (see ModelConfig.padded_heads)."""
+    h, kv, hp = cfg.n_heads, cfg.n_kv_heads, cfg.padded_heads
+    g, g_pad = h // kv, hp // kv
+    pos = xp.arange(hp) % g_pad
+    return (pos < g).astype(xp.float32)
+
+
+def init_attention(key, cfg: ModelConfig, n_layers: int):
+    d, h, k, hd = cfg.d_model, cfg.padded_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = pdtype(cfg)
+    keys = jax.random.split(key, 4)
+    L = (n_layers,)
+    mask = head_pad_mask(cfg, jnp).astype(dt)
+    params = {
+        "wq": _dense_init(keys[0], L + (d, h, hd), d, dt)
+        * mask[None, None, :, None],
+        "wk": _dense_init(keys[1], L + (d, k, hd), d, dt),
+        "wv": _dense_init(keys[2], L + (d, k, hd), d, dt),
+        "wo": _dense_init(keys[3], L + (h, hd, d), cfg.n_heads * hd, dt)
+        * mask[None, :, None, None],
+    }
+    axes = {
+        "wq": ("layers", "embed", "heads", "head_dim"),
+        "wk": ("layers", "embed", "kv_heads", "head_dim"),
+        "wv": ("layers", "embed", "kv_heads", "head_dim"),
+        "wo": ("layers", "heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((n_layers, hd), dt)
+        params["k_norm"] = jnp.ones((n_layers, hd), dt)
+        axes["q_norm"] = axes["k_norm"] = ("layers", "head_dim")
+    return params, axes
+
+
+def init_mlp(key, cfg: ModelConfig, n_layers: int, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi_gate": _dense_init(k1, (n_layers, d, f), d, dt),
+        "wi_up": _dense_init(k2, (n_layers, d, f), d, dt),
+        "wo": _dense_init(k3, (n_layers, f, d), f, dt),
+    }
+    axes = {
+        "wi_gate": ("layers", "embed", "mlp"),
+        "wi_up": ("layers", "embed", "mlp"),
+        "wo": ("layers", "mlp", "embed"),
+    }
+    return params, axes
+
+
+def init_norms(cfg: ModelConfig, n_layers: int, n_norms: int = 2):
+    if cfg.nonparametric_norm:
+        return {}, {}
+    dt = pdtype(cfg)
+    params = {f"norm_{i}": jnp.ones((n_layers, cfg.d_model), dt)
+              for i in range(n_norms)}
+    axes = {f"norm_{i}": ("layers", "embed") for i in range(n_norms)}
+    return params, axes
+
+
+# -------------------------------------------------------------------- norms
+
+def rms_norm(x, weight=None, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layer_norm_nonparametric(x, eps: float = 1e-5):
+    """olmo: LN without scale/bias parameters."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def block_norm(x, params, idx: int, cfg: ModelConfig):
+    if cfg.nonparametric_norm:
+        return layer_norm_nonparametric(x, cfg.norm_eps)
+    return rms_norm(x, params[f"norm_{idx}"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------- rope
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # (..., S, 1, half): broadcast positions over heads and frequencies
+    angles = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@dataclasses.dataclass
+class KVCache:
+    """Contiguous decode cache for one layer stack: (L, B, C, Kh, hd)."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array          # scalar int32 — tokens already cached
+
+
+def _attend(q, k, v, mask_bias, cfg: ModelConfig):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, Kh, hd); mask_bias: (B|1, 1, Sq, Sk).
+
+    GQA is evaluated by repeating KV heads up to H *before* the einsums so
+    the ``heads`` axis survives intact through every contraction — folding
+    q to (B, Sq, Kh, G, hd) instead reshapes the sharded head axis, which
+    GSPMD cannot propagate and silently replicates attention over the
+    model axis (observed 16x FLOP blow-up in the 256-chip dry run).
+    KV stays un-repeated at rest (cache memory unchanged); the repeat is a
+    broadcast the compiler fuses into the matmul operand.
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, k.astype(jnp.float32)) \
+        * (hd ** -0.5)
+    scores = scores + mask_bias                      # (B,H,Sq,Sk)
+    # softmax in f32 (stability), probs stored/multiplied in the param
+    # dtype: halves the (B,H,S,S) materialization and runs PV on the MXU
+    # bf16 path (§Perf iteration 5).
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out.astype(q.dtype)
+
+
+def causal_mask_bias(sq: int, sk: int, window: int | None,
+                     q_offset) -> jax.Array:
+    """(1, 1, Sq, Sk) additive f32 bias.  ``q_offset`` aligns decode steps:
+    absolute query position = q_offset + row."""
+    row = q_offset + jnp.arange(sq)[:, None]
+    col = jnp.arange(sk)[None, :]
+    keep = col <= row
+    if window is not None:
+        keep &= col > row - window
+    return jnp.where(keep, 0.0, -1e30).astype(jnp.float32)[None, None]
+
+
+def apply_attention(p, x, cfg: ModelConfig, *, positions, mask_bias,
+                    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache_index=None, causal: bool = True):
+    """One attention layer (single-layer slices of the stacked params).
+
+    Returns (out, (new_k_cache, new_v_cache) | None).
+    With a cache: x is the new token(s); k/v are written at cache_index.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if causal:   # rope only on self-attention (whisper cross-attn skips it)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    out = _attend(q, k, v, mask_bias, cfg)
+    if cfg.padded_heads != cfg.n_heads:
+        # zero the padded heads' outputs so (a) they contribute nothing and
+        # (b) wo's pad rows receive exactly-zero gradients (stay frozen).
+        out = out * head_pad_mask(cfg, jnp).astype(out.dtype)[None, None, :,
+                                                              None]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# -------------------------------------------------------------------- mlp
+
+def apply_mlp(p, x):
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

@@ -1,0 +1,544 @@
+"""Model assembly: init + forward for every assigned architecture family.
+
+All stacks scan over layers with stacked weights (compile time is
+depth-independent), remat-wrapped per cfg.remat.  Forward modes:
+
+  train_logits(params, cfg, tokens, ...)          -> logits (B,S,V), aux
+  prefill(params, cfg, tokens, cache_len)         -> logits_last, caches
+  decode_step(params, cfg, token, caches, index)  -> logits, caches
+
+Caches are family-appropriate: (k, v) stacks for attention layers,
+(ssm_state, conv_state) for mamba heads, (C, n, m) for mLSTM, etc.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_attention, apply_mlp, block_norm,
+                     causal_mask_bias, init_attention, init_mlp, init_norms,
+                     pdtype, rms_norm, _dense_init)
+from .moe import apply_moe, init_moe
+from .ssm import (apply_mamba, apply_mlstm, apply_slstm, init_mamba,
+                  init_mlstm, init_slstm)
+
+
+# ================================================================= init
+
+def init_model(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 12)
+    dt = pdtype(cfg)
+    params: dict = {}
+    axes: dict = {}
+
+    params["embed"] = _dense_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                  cfg.d_model, dt)
+    axes["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings:
+        params["head"] = _dense_init(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                     cfg.d_model, dt)
+        axes["head"] = ("embed", "vocab")
+    if not cfg.nonparametric_norm:
+        params["final_norm"] = jnp.ones((cfg.d_model,), dt)
+        axes["final_norm"] = ("embed",)
+
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        # xlstm: pattern of (slstm_every-1) mLSTM + 1 sLSTM per repetition
+        rep = cfg.slstm_every or L
+        assert L % rep == 0
+        n_rep = L // rep
+        mp, ma = init_mlstm(ks[2], cfg, n_rep * (rep - 1)) \
+            if rep > 1 else ({}, {})
+        if rep > 1:
+            mp = jax.tree.map(
+                lambda a: a.reshape((n_rep, rep - 1) + a.shape[1:]), mp)
+            ma = {k: ("repeat",) + v for k, v in ma.items()}
+        sp, sa = init_slstm(ks[3], cfg, n_rep)
+        sa = {k: ("repeat",) + v[1:] for k, v in sa.items()}
+        np_, na = init_norms(cfg, n_rep * rep)
+        np_ = jax.tree.map(
+            lambda a: a.reshape((n_rep, rep) + a.shape[1:]), np_)
+        na = {k: ("repeat",) + v for k, v in na.items()}
+        params["blocks"] = {"mlstm": mp, "slstm": sp, "norms": np_}
+        axes["blocks"] = {"mlstm": ma, "slstm": sa, "norms": na}
+        return params, axes
+
+    ap, aa = init_attention(ks[2], cfg, L)
+    np_, na = init_norms(cfg, L)
+    blocks = {"attn": ap, "norms": np_}
+    baxes = {"attn": aa, "norms": na}
+    if cfg.family == "hybrid":
+        mp, ma = init_mamba(ks[3], cfg, L)
+        blocks["mamba"] = mp
+        baxes["mamba"] = ma
+    if cfg.is_moe:
+        ep, ea = init_moe(ks[4], cfg, L)
+        blocks["moe"] = ep
+        baxes["moe"] = ea
+    else:
+        fp, fa = init_mlp(ks[5], cfg, L)
+        blocks["mlp"] = fp
+        baxes["mlp"] = fa
+    params["blocks"] = blocks
+    axes["blocks"] = baxes
+
+    if cfg.encoder_layers:       # whisper encoder + cross-attention stacks
+        eap, eaa = init_attention(ks[6], cfg, cfg.encoder_layers)
+        efp, efa = init_mlp(ks[7], cfg, cfg.encoder_layers)
+        enp, ena = init_norms(cfg, cfg.encoder_layers)
+        params["encoder"] = {"attn": eap, "mlp": efp, "norms": enp}
+        axes["encoder"] = {"attn": eaa, "mlp": efa, "norms": ena}
+        cap, caa = init_attention(ks[8], cfg, L)
+        cnp, cna = init_norms(cfg, L, n_norms=1)
+        params["cross"] = {"attn": cap, "norms": cnp}
+        axes["cross"] = {"attn": caa, "norms": cna}
+    if cfg.frontend is not None:
+        params["frontend_proj"] = _dense_init(
+            ks[9], (cfg.d_model, cfg.d_model), cfg.d_model, dt)
+        axes["frontend_proj"] = ("embed", "embed")
+    return params, axes
+
+
+# ============================================================ body helpers
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _dense_block(bp, x, cfg: ModelConfig, *, positions, mask_bias,
+                 kv_cache=None, cache_index=None, mamba_state=None,
+                 single_step=False, enc_out=None, cross_p=None):
+    """One decoder block (attention [+mamba] + mlp/moe).  Generic across
+    dense/moe/hybrid/vlm/audio-decoder families."""
+    aux = jnp.float32(0.0)
+    h = block_norm(x, bp["norms"], 0, cfg)
+    attn_out, new_kv = apply_attention(
+        bp["attn"], h, cfg, positions=positions, mask_bias=mask_bias,
+        kv_cache=kv_cache, cache_index=cache_index)
+    new_mamba = None
+    if cfg.family == "hybrid":
+        state, conv_state = mamba_state if mamba_state is not None \
+            else (None, None)
+        m_out, new_mamba = apply_mamba(bp["mamba"], h, cfg, state=state,
+                                       conv_state=conv_state,
+                                       single_step=single_step)
+        # hymba: parallel attention + mamba heads, outputs averaged after
+        # per-branch normalization
+        attn_out = 0.5 * (rms_norm(attn_out, eps=cfg.norm_eps)
+                          + rms_norm(m_out, eps=cfg.norm_eps))
+    x = x + attn_out
+    if cross_p is not None:     # whisper decoder cross-attention
+        h = block_norm(x, cross_p["norms"], 0, cfg)
+        # cross attention: kv from encoder output, non-causal, no rope
+        b, sq = h.shape[0], h.shape[1]
+        sk = enc_out.shape[1]
+        zero_bias = jnp.zeros((1, 1, sq, sk), jnp.float32)
+        kq = jnp.einsum("bsd,dhk->bshk", h, cross_p["attn"]["wq"])
+        kk = jnp.einsum("bsd,dhk->bshk", enc_out, cross_p["attn"]["wk"])
+        kv = jnp.einsum("bsd,dhk->bshk", enc_out, cross_p["attn"]["wv"])
+        from .layers import _attend
+        c_out = _attend(kq, kk, kv, zero_bias, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", c_out, cross_p["attn"]["wo"])
+    h = block_norm(x, bp["norms"], 1, cfg)
+    if cfg.is_moe:
+        ff, aux = apply_moe(bp["moe"], h, cfg)
+    else:
+        ff = apply_mlp(bp["mlp"], h)
+    return x + ff, aux, new_kv, new_mamba
+
+
+def _window_for_layer(cfg: ModelConfig, layer_flag):
+    """hybrid/moe archs with sliding windows: layer_flag==1 -> global."""
+    return cfg.sliding_window
+
+
+# ============================================================== embeddings
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens]                       # (B,S,D) gather
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def _prepend_frontend(params, cfg: ModelConfig, x, frontend_embeds):
+    """vlm: project stub patch embeddings and prepend to the text tokens."""
+    fe = jnp.einsum("bsd,de->bse", frontend_embeds.astype(x.dtype),
+                    params["frontend_proj"])
+    return jnp.concatenate([fe, x[:, : x.shape[1] - fe.shape[1]]], axis=1)
+
+
+# ============================================================== train mode
+
+def _constrain_tree(tree, specs):
+    """FSDP weight-gather: constrain scanned weight slices to their
+    compute shardings (parallel/sharding.block_compute_shardings)."""
+    if specs is None:
+        return tree
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree, specs)
+
+
+def _c(x, spec):
+    """Activation sharding constraint (None = let GSPMD propagate).
+
+    Pinning (B, S, D) activations to batch-over-data at block boundaries is
+    load-bearing: the embedding gather otherwise inherits the table's
+    d-over-data (FSDP) sharding and GSPMD silently replicates the batch —
+    a 16x FLOP blow-up observed in the 256-chip dry run.
+    """
+    return x if spec is None else jax.lax.with_sharding_constraint(x, spec)
+
+
+def train_logits(params, cfg: ModelConfig, tokens, *,
+                 frontend_embeds=None, block_specs=None, act_spec=None):
+    """tokens (B,S) -> (logits (B,S,V), aux_loss)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        x = _prepend_frontend(params, cfg, x, frontend_embeds)
+    x = _c(x, act_spec)
+    positions = jnp.arange(s)[None, :]
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, frontend_embeds)
+
+    if cfg.family == "ssm":
+        x = _run_xlstm(params, cfg, x)
+        aux = jnp.float32(0.0)
+    else:
+        mask_full = causal_mask_bias(s, s, None, 0)
+        mask_sw = causal_mask_bias(s, s, cfg.sliding_window, 0) \
+            if cfg.sliding_window else mask_full
+        layer_ids = jnp.arange(cfg.n_layers)
+
+        def body(carry, scanned):
+            xc, aux_acc = carry
+            xc = _c(xc, act_spec)
+            bp, cp, lid = scanned
+            bp = _constrain_tree(bp, block_specs)
+            if cfg.sliding_window and cfg.global_attn_every:
+                is_global = (lid % cfg.global_attn_every) == 0
+                bias = jnp.where(is_global, mask_full, mask_sw)
+            elif cfg.sliding_window:
+                bias = mask_sw
+            else:
+                bias = mask_full
+            xc, aux, _, _ = _dense_block(
+                bp, xc, cfg, positions=positions, mask_bias=bias,
+                enc_out=enc_out, cross_p=cp)
+            return (xc, aux_acc + aux), None
+
+        body = _maybe_remat(body, cfg)
+        cross = params.get("cross")
+        scanned = (params["blocks"], cross, layer_ids) if cross is not None \
+            else (params["blocks"], None, layer_ids)
+        if cross is None:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, sc: body(c, (sc[0], None, sc[1])),
+                (x, jnp.float32(0.0)), (params["blocks"], layer_ids))
+        else:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.float32(0.0)), scanned)
+
+    logits = _final_logits(params, cfg, _c(x, act_spec))
+    return logits, aux
+
+
+def _final_logits(params, cfg: ModelConfig, x):
+    if cfg.nonparametric_norm:
+        from .layers import layer_norm_nonparametric
+        x = layer_norm_nonparametric(x, cfg.norm_eps)
+    else:
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:      # mask pad columns
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def _run_encoder(params, cfg: ModelConfig, frontend_embeds):
+    """whisper encoder: non-causal self-attention over stub features."""
+    enc = params["encoder"]
+    x = frontend_embeds.astype(pdtype(cfg))
+    if "frontend_proj" in params:
+        x = jnp.einsum("bsd,de->bse", x, params["frontend_proj"])
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    zero_bias = jnp.zeros((1, 1, s, s), jnp.float32)
+
+    def body(xc, bp):
+        h = block_norm(xc, bp["norms"], 0, cfg)
+        a, _ = apply_attention(bp["attn"], h, cfg, positions=positions,
+                               mask_bias=zero_bias)
+        xc = xc + a
+        h = block_norm(xc, bp["norms"], 1, cfg)
+        return xc + apply_mlp(bp["mlp"], h), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, enc)
+    return x
+
+
+def _run_xlstm(params, cfg: ModelConfig, x, states=None,
+               single_step: bool = False):
+    """xlstm pattern scan: (slstm_every-1) mLSTM blocks + 1 sLSTM block per
+    repetition.  states (decode): pytree matching the scan structure."""
+    blocks = params["blocks"]
+    rep = cfg.slstm_every or cfg.n_layers
+    b = x.shape[0]
+    h_heads, d = cfg.mlstm_heads, cfg.d_model
+    hd = d // h_heads
+    n_rep = cfg.n_layers // rep
+
+    if states is None:
+        m_state0 = (jnp.zeros((n_rep, rep - 1, b, h_heads, hd, hd),
+                              jnp.float32),
+                    jnp.zeros((n_rep, rep - 1, b, h_heads, hd), jnp.float32),
+                    jnp.full((n_rep, rep - 1, b, h_heads), -1e30,
+                             jnp.float32))
+        z = jnp.zeros((n_rep, b, d), jnp.float32)
+        s_state0 = (z, z, z, jnp.full((n_rep, b, d), -1e30, jnp.float32))
+    else:
+        m_state0, s_state0 = states
+
+    def body(xc, scanned):
+        mp, sp, norms, mst, sst = scanned
+        new_mst, new_sst = [], None
+        for i in range(rep - 1):
+            bp = jax.tree.map(lambda a: a[i], mp)
+            st = jax.tree.map(lambda a: a[i], mst)
+            h = rms_norm(xc, norms["norm_0"][i], cfg.norm_eps)
+            out, st_new = apply_mlstm(bp, h, cfg, state=st,
+                                      single_step=single_step)
+            xc = xc + out              # xLSTM blocks carry no separate FFN
+            new_mst.append(st_new)
+        h = rms_norm(xc, norms["norm_0"][rep - 1], cfg.norm_eps)
+        out, new_sst = apply_slstm(sp, h, cfg, state=sst)
+        xc = xc + out
+        mst_out = jax.tree.map(lambda *xs: jnp.stack(xs), *new_mst) \
+            if new_mst else mst
+        return xc, (mst_out, new_sst)
+
+    body = _maybe_remat(body, cfg)
+    x, new_states = jax.lax.scan(
+        body, x, (blocks["mlstm"], blocks["slstm"], blocks["norms"],
+                  m_state0, s_state0))
+    return (x, new_states) if states is not None or single_step else x
+
+
+# ======================================================== prefill / decode
+
+def make_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    """Allocate decode caches for the whole layer stack.
+
+    dense/moe/vlm/audio: (k, v) of (L, B, C, Kh, hd).
+    hybrid: kv + per-layer (ssm_state, conv_state).
+    ssm: xlstm scan-structured recurrent states, no KV at all.
+    """
+    dt = pdtype(cfg)
+    b = batch
+    if cfg.family == "ssm":
+        rep = cfg.slstm_every or cfg.n_layers
+        n_rep = cfg.n_layers // rep
+        h, d = cfg.mlstm_heads, cfg.d_model
+        hd = d // h
+        m_state = (jnp.zeros((n_rep, rep - 1, b, h, hd, hd), jnp.float32),
+                   jnp.zeros((n_rep, rep - 1, b, h, hd), jnp.float32),
+                   jnp.full((n_rep, rep - 1, b, h), -1e30, jnp.float32))
+        z = jnp.zeros((n_rep, b, d), jnp.float32)
+        s_state = (z, z, z, jnp.full((n_rep, b, d), -1e30, jnp.float32))
+        return {"states": (m_state, s_state)}
+    c = cache_len if cfg.sliding_window is None \
+        else min(cache_len, cfg.sliding_window)
+    kv = (jnp.zeros((cfg.n_layers, b, c, cfg.n_kv_heads, cfg.head_dim), dt),
+          jnp.zeros((cfg.n_layers, b, c, cfg.n_kv_heads, cfg.head_dim), dt))
+    caches = {"kv": kv}
+    if cfg.family == "hybrid":
+        caches["mamba"] = (
+            jnp.zeros((cfg.n_layers, b, cfg.d_model, cfg.ssm_state),
+                      jnp.float32),
+            jnp.zeros((cfg.n_layers, b, cfg.ssm_conv - 1, cfg.d_model), dt))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, index, *,
+                enc_out=None, block_specs=None, act_spec=None):
+    """One decode step: token (B, 1) int32, index = absolute position
+    (also the cache write slot; for sliding-window caches the wrapper maps
+    absolute position -> ring slot before calling).
+
+    Returns (logits (B, V), new_caches).
+    """
+    x = _c(embed_tokens(params, cfg, token), act_spec)
+
+    if cfg.family == "ssm":
+        x, new_states = _run_xlstm(params, cfg, x, states=caches["states"],
+                                   single_step=True)
+        logits = _final_logits(params, cfg, x)
+        return logits[:, 0], {"states": new_states}
+
+    positions = jnp.full((1, 1), index, jnp.int32)
+    ck, cv = caches["kv"]
+    c = ck.shape[2]
+    # ring slot for sliding-window caches; plain slot otherwise
+    slot = index % c if cfg.sliding_window is not None else index
+    mask = _decode_mask_bias(cfg, c, index)
+
+    mamba = caches.get("mamba")
+
+    def body(carry, scanned):
+        xc, aux_acc = carry
+        xc = _c(xc, act_spec)
+        if cfg.family == "hybrid":
+            bp, cp, k_l, v_l, ms_l, mc_l = scanned
+            mstate = (ms_l, mc_l)
+        else:
+            bp, cp, k_l, v_l = scanned
+            mstate = None
+        bp = _constrain_tree(bp, block_specs)
+        xc, aux, new_kv, new_m = _dense_block(
+            bp, xc, cfg, positions=positions, mask_bias=mask,
+            kv_cache=(k_l, v_l), cache_index=slot, mamba_state=mstate,
+            single_step=True, enc_out=enc_out, cross_p=cp)
+        ys = (new_kv[0], new_kv[1]) + ((new_m[0], new_m[1])
+                                       if new_m is not None else ())
+        return (xc, aux_acc + aux), ys
+
+    cross = params.get("cross")
+    if cfg.family == "hybrid":
+        scanned = (params["blocks"], cross, ck, cv, mamba[0], mamba[1]) \
+            if cross is not None else \
+            (params["blocks"], None, ck, cv, mamba[0], mamba[1])
+    else:
+        scanned = (params["blocks"], cross, ck, cv) if cross is not None \
+            else (params["blocks"], None, ck, cv)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), scanned)
+
+    new_caches = dict(caches)
+    new_caches["kv"] = (ys[0], ys[1])
+    if cfg.family == "hybrid":
+        new_caches["mamba"] = (ys[2], ys[3])
+    logits = _final_logits(params, cfg, x)
+    return logits[:, 0], new_caches
+
+
+def _decode_mask_bias(cfg: ModelConfig, cache_len: int, index):
+    """(1,1,1,C) bias over the cache for one new token at absolute
+    ``index``.  Contiguous cache: allow slots <= index.  Ring cache
+    (sliding window): every resident slot is within the window by
+    construction; mask only slots not yet written (index < window)."""
+    col = jnp.arange(cache_len)[None, None, None, :]
+    if cfg.sliding_window is None:
+        keep = col <= index
+    else:
+        keep = col <= jnp.minimum(index, cache_len - 1)
+    return jnp.where(keep, 0.0, -1e30).astype(jnp.float32)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
+            frontend_embeds=None, block_specs=None, act_spec=None):
+    """Run the full prompt, return (last-position logits, filled caches).
+
+    The dry-run's prefill_32k cell lowers this.  Cache fill is done by
+    running train-mode attention and writing k/v per layer — implemented by
+    scanning with per-layer cache writes.
+    """
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        x = _prepend_frontend(params, cfg, x, frontend_embeds)
+    x = _c(x, act_spec)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, frontend_embeds)
+
+    if cfg.family == "ssm":
+        x, new_states = _run_xlstm(
+            params, cfg, x,
+            states=make_caches(cfg, b, cache_len)["states"])
+        logits = _final_logits(params, cfg, x[:, -1:])
+        return logits[:, 0], {"states": new_states}
+
+    caches = make_caches(cfg, b, cache_len)
+    ck, cv = caches["kv"]
+    c = ck.shape[2]
+    positions = jnp.arange(s)[None, :]
+    mask_sw = causal_mask_bias(s, s, cfg.sliding_window, 0)
+    mask_global = causal_mask_bias(s, s, None, 0)
+    mamba = caches.get("mamba")
+    layer_ids = jnp.arange(cfg.n_layers)
+
+    def body(carry, scanned):
+        xc, aux_acc = carry
+        xc = _c(xc, act_spec)
+        if cfg.family == "hybrid":
+            bp, cp, lid, k_l, v_l, ms_l, mc_l = scanned
+            mstate = (ms_l, mc_l)
+        else:
+            bp, cp, lid, k_l, v_l = scanned
+            mstate = None
+        bp = _constrain_tree(bp, block_specs)
+        if cfg.sliding_window and cfg.global_attn_every:
+            bias = jnp.where((lid % cfg.global_attn_every) == 0,
+                             mask_global, mask_sw)
+        else:
+            bias = mask_sw
+        # Cache fill from the block INPUT (the same normed h the attention
+        # projections consume), last C positions.
+        h_in = block_norm(xc, bp["norms"], 0, cfg)
+        tail = h_in[:, -c:] if s >= c else h_in
+        kh = jnp.einsum("bsd,dhk->bshk", tail, bp["attn"]["wk"])
+        vh = jnp.einsum("bsd,dhk->bshk", tail, bp["attn"]["wv"])
+        if cfg.qk_norm:
+            kh = rms_norm(kh, bp["attn"]["k_norm"], cfg.norm_eps)
+        tail_pos = positions[:, -c:] if s >= c else positions
+        kh = _rope_cache(kh, tail_pos, cfg)
+        if cfg.sliding_window is not None and s >= c:
+            # ring-cache invariant: position p lives in slot p % c
+            shift = (s - c) % c
+            kh = jnp.roll(kh, shift, axis=1)
+            vh = jnp.roll(vh, shift, axis=1)
+        k_new = jax.lax.dynamic_update_slice(
+            k_l, kh.astype(k_l.dtype), (0, 0, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(
+            v_l, vh.astype(v_l.dtype), (0, 0, 0, 0))
+        xc, aux, _, new_m = _dense_block(
+            bp, xc, cfg, positions=positions, mask_bias=bias,
+            mamba_state=mstate, enc_out=enc_out, cross_p=cp)
+        ys = (k_new, v_new) + ((new_m[0], new_m[1])
+                               if new_m is not None else ())
+        return (xc, aux_acc + aux), ys
+
+    cross = params.get("cross")
+    if cfg.family == "hybrid":
+        scanned = (params["blocks"], cross, layer_ids, ck, cv,
+                   mamba[0], mamba[1]) if cross is not None else \
+            (params["blocks"], None, layer_ids, ck, cv, mamba[0], mamba[1])
+    else:
+        scanned = (params["blocks"], cross, layer_ids, ck, cv) \
+            if cross is not None \
+            else (params["blocks"], None, layer_ids, ck, cv)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), scanned)
+    caches = dict(caches)
+    caches["kv"] = (ys[0], ys[1])
+    if cfg.family == "hybrid":
+        caches["mamba"] = (ys[2], ys[3])
+    if cfg.encoder_layers:
+        caches["enc_out"] = enc_out
+    logits = _final_logits(params, cfg, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def _rope_cache(k, positions, cfg: ModelConfig):
+    from .layers import rope
+    return rope(k, positions, cfg.rope_theta)
+

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts block: group-limited token-choice routing with
+capacity, expert-parallel over the ``model`` mesh axis.
+
+Design (DESIGN.md §5): routing is confined to each sequence (the "group"),
+so no token ever crosses the data axis — the only collective the MoE layer
+adds beyond dense TP is the combine-side reduction over the expert axis,
+which XLA emits as the same all-reduce a dense FFN needs.  Dispatch uses
+per-expert top-C token gathers (capacity C = ceil(cf * k * S / E)), i.e.
+Switch/GShard-style dropping semantics without the (T, E, C) one-hot blowup.
+
+Covers mixtral (8e top-2) and kimi-k2 (384e top-8 + 1 shared expert).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init, pdtype
+
+
+def capacity(cfg: ModelConfig, seq_len: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * seq_len / cfg.n_experts) + 1
+    return max(1, min(c, seq_len))
+
+
+def init_moe(key, cfg: ModelConfig, n_layers: int):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    L = (n_layers,)
+    params = {
+        "router": _dense_init(ks[0], L + (d, e), d, jnp.float32),
+        "w_gate": _dense_init(ks[1], L + (e, d, f), d, dt),
+        "w_up": _dense_init(ks[2], L + (e, d, f), d, dt),
+        "w_down": _dense_init(ks[3], L + (e, f, d), f, dt),
+    }
+    emlp = "mlp" if cfg.moe_tp else "expert_mlp"
+    eax = None if cfg.moe_tp else "expert"
+    axes = {
+        "router": ("layers", "embed", "expert"),
+        "w_gate": ("layers", eax, "embed", emlp),
+        "w_up": ("layers", eax, "embed", emlp),
+        "w_down": ("layers", eax, emlp, "embed"),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        params["shared_gate"] = _dense_init(ks[4], L + (d, fs), d, dt)
+        params["shared_up"] = _dense_init(
+            jax.random.fold_in(ks[4], 1), L + (d, fs), d, dt)
+        params["shared_down"] = _dense_init(
+            jax.random.fold_in(ks[4], 2), L + (fs, d), fs, dt)
+        axes["shared_gate"] = ("layers", "embed", "mlp")
+        axes["shared_up"] = ("layers", "embed", "mlp")
+        axes["shared_down"] = ("layers", "mlp", "embed")
+    return params, axes
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D).  Per-sequence group routing."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B,S,E) f32
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (B,S,K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # token -> expert weight matrix, then per-expert top-C token selection
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)   # (B,S,K,E)
+    weights = (gate_vals[..., None] * onehot).sum(axis=2)     # (B,S,E)
+    expert_scores = weights.transpose(0, 2, 1)                # (B,E,S)
+    top_c_w, top_c_idx = jax.lax.top_k(expert_scores, c)      # (B,E,C)
+
+    # dispatch: gather the chosen tokens per expert
+    xg = jnp.take_along_axis(x[:, None], top_c_idx[..., None],
+                             axis=2)                          # (B,E,C,D)
+    gate = jnp.einsum("becd,edf->becf", xg, p["w_gate"])
+    up = jnp.einsum("becd,edf->becf", xg, p["w_up"])
+    # silu stays in the param dtype: upcasting to f32 here drags the whole
+    # dispatch-gradient chain (and its (B,E,C,D) cross-model all-reduces)
+    # into f32 — 2x the collective bytes for no routing benefit (the
+    # router, where precision matters, is f32 above).  §Perf iteration 3.
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])          # (B,E,C,D)
+    y = y * top_c_w[..., None].astype(y.dtype)                # combine gates
+
+    # Combine: one-hot matmul instead of scatter-add.  GSPMD partitions a
+    # scatter over a model-sharded expert dim by replicating the (B,S,D)
+    # operand globally and all-reducing it in f32 — observed as 75 % of
+    # kimi-k2's collective bytes (§Perf iteration 4).  The one-hot
+    # contraction keeps experts local, costs one extra MXU einsum
+    # (~2.4e12 FLOPs/layer, ~12 us at peak) and leaves exactly the dense-TP
+    # bf16 partial-sum all-reduce of (B,S,D).
+    onehot = jax.lax.stop_gradient(
+        (top_c_idx[..., None] == jnp.arange(s)[None, None, None]
+         ).astype(y.dtype))                                   # (B,E,C,S)
+    out = jnp.einsum("becs,becd->bsd", onehot, y)
+
+    if cfg.n_shared_experts:
+        sg = jnp.einsum("bsd,df->bsf", x, p["shared_gate"])
+        su = jnp.einsum("bsd,df->bsf", x, p["shared_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        out = out + jnp.einsum("bsf,fd->bsd", sh, p["shared_down"])
+
+    aux = router_aux_loss(probs, gate_idx, cfg)
+    return out, aux
+
+
+def router_aux_loss(probs, gate_idx, cfg: ModelConfig):
+    """Switch-style load-balancing loss (mean over groups)."""
+    e = cfg.n_experts
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)   # (B,S,K,E)
+    frac_tokens = onehot.sum(axis=2).mean(axis=1)             # (B,E)
+    frac_probs = probs.mean(axis=1)                           # (B,E)
+    return (e * (frac_tokens * frac_probs).sum(axis=-1)).mean()

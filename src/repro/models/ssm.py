@@ -1,0 +1,221 @@
+"""Recurrent blocks: Mamba-style selective SSM (hymba heads) and the
+xLSTM pair (mLSTM matrix memory + sLSTM scalar memory).
+
+All three expose a sequence form (used by train/prefill: jax.lax.scan over
+time) and a single-step form (used by decode: O(1) state update — this is
+what makes the ssm/hybrid archs runnable at long_500k where attention KV
+would not fit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init, pdtype
+
+
+# =========================================================== selective SSM
+
+def init_mamba(key, cfg: ModelConfig, n_layers: int):
+    d, n = cfg.d_model, cfg.ssm_state
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    L = (n_layers,)
+    params = {
+        "in_proj": _dense_init(ks[0], L + (d, 2 * d), d, dt),
+        "conv_w": _dense_init(ks[1], L + (cfg.ssm_conv, d), cfg.ssm_conv, dt),
+        "x_proj": _dense_init(ks[2], L + (d, 2 * n + 1), d, dt),
+        "a_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+            L + (d, n)).copy(),
+        "d_skip": jnp.ones(L + (d,), jnp.float32),
+        "out_proj": _dense_init(ks[3], L + (d, d), d, dt),
+    }
+    axes = {
+        "in_proj": ("layers", "embed", "mlp"),
+        "conv_w": ("layers", None, "mlp"),
+        "x_proj": ("layers", "embed", None),
+        "a_log": ("layers", "mlp", None),
+        "d_skip": ("layers", "mlp"),
+        "out_proj": ("layers", "mlp", "embed"),
+    }
+    return params, axes
+
+
+def _mamba_scan(u, delta, a, bmat, cmat, d_skip, h0):
+    """u: (B,S,D); delta: (B,S,D); a: (D,N); bmat/cmat: (B,S,N).
+
+    h_t = exp(delta a) h_{t-1} + delta * b_t * u_t ;  y_t = c_t . h_t
+    Returns (y (B,S,D), h_final (B,D,N)).
+    """
+    da = jnp.einsum("bsd,dn->bsdn", delta, a)          # (B,S,D,N)
+    decay = jnp.exp(da)
+    drive = jnp.einsum("bsd,bsn->bsdn", delta * u, bmat)
+
+    def step(h, inputs):
+        dec, drv, c = inputs                           # (B,D,N),(B,D,N),(B,N)
+        h = dec * h + drv
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (decay.transpose(1, 0, 2, 3), drive.transpose(1, 0, 2, 3),
+          cmat.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + u * d_skip             # (B,S,D)
+    return y, h_final
+
+
+def apply_mamba(p, x, cfg: ModelConfig, *, state=None, conv_state=None,
+                single_step: bool = False):
+    """x: (B,S,D).  Returns (y, (ssm_state, conv_state)).
+
+    state: (B, D, N) SSM state; conv_state: (B, K-1, D) conv tail.
+    """
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)                   # (B,S,D) each
+
+    kconv = cfg.ssm_conv
+    if conv_state is None:
+        conv_state = jnp.zeros((b, kconv - 1, d), u.dtype)
+    upad = jnp.concatenate([conv_state, u], axis=1)    # (B, S+K-1, D)
+    # depthwise causal conv along seq
+    u = sum(upad[:, i:i + s] * p["conv_w"][i] for i in range(kconv))
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = upad[:, -(kconv - 1):] if kconv > 1 else conv_state
+
+    proj = jnp.einsum("bsd,de->bse", u, p["x_proj"]).astype(jnp.float32)
+    bmat, cmat, dt_raw = (proj[..., :n], proj[..., n:2 * n],
+                          proj[..., 2 * n:])
+    delta = jax.nn.softplus(dt_raw)                    # (B,S,1)
+    delta = jnp.broadcast_to(delta, (b, s, d))
+    a = -jnp.exp(p["a_log"])                           # (D,N), negative
+
+    if state is None:
+        state = jnp.zeros((b, d, n), jnp.float32)
+    if single_step:
+        # one token: closed-form update, no scan
+        dec = jnp.exp(jnp.einsum("bd,dn->bdn", delta[:, 0], a))
+        drv = jnp.einsum("bd,bn->bdn",
+                         (delta[:, 0] * u[:, 0].astype(jnp.float32)),
+                         bmat[:, 0])
+        state = dec * state + drv
+        y = jnp.einsum("bdn,bn->bd", state, cmat[:, 0])[:, None]
+        y = y + u.astype(jnp.float32) * p["d_skip"]
+    else:
+        y, state = _mamba_scan(u.astype(jnp.float32), delta, a, bmat, cmat,
+                               p["d_skip"], state)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return out, (state, new_conv_state)
+
+
+# ================================================================== mLSTM
+
+def init_mlstm(key, cfg: ModelConfig, n_layers: int):
+    d, h = cfg.d_model, cfg.mlstm_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    L = (n_layers,)
+    params = {
+        "wqkv": _dense_init(ks[0], L + (d, 3, h, d // h), d, dt),
+        "wgates": _dense_init(ks[1], L + (d, 2, h), d, jnp.float32),
+        "wo": _dense_init(ks[2], L + (h, d // h, d), d, dt),
+    }
+    axes = {
+        "wqkv": ("layers", "embed", None, "heads", "head_dim"),
+        "wgates": ("layers", "embed", None, "heads"),
+        "wo": ("layers", "heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, *, state=None,
+                single_step: bool = False):
+    """Stabilized mLSTM (xLSTM §mLSTM).  state = (C, n, m):
+    C (B,H,hd,hd) matrix memory, n (B,H,hd) normalizer, m (B,H) stabilizer.
+    """
+    b, s, d = x.shape
+    h = cfg.mlstm_heads
+    hd = d // h
+    qkv = jnp.einsum("bsd,dthk->btshk", x, p["wqkv"])   # (B,3,S,H,hd)
+    q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]
+    k = k * (hd ** -0.5)
+    gates = jnp.einsum("bsd,dgh->bgsh", x.astype(jnp.float32),
+                       p["wgates"])                     # (B,2,S,H)
+    i_log, f_log = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
+
+    if state is None:
+        state = (jnp.zeros((b, h, hd, hd), jnp.float32),
+                 jnp.zeros((b, h, hd), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+
+    def step(carry, inputs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inputs                     # (B,H,hd)...(B,H)
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)[..., None]            # (B,H,1)
+        f_s = jnp.exp(ft + m - m_new)[..., None]
+        C = f_s[..., None] * C + i_s[..., None] * jnp.einsum(
+            "bhv,bhk->bhvk", vt, kt)
+        n = f_s * n + i_s * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)[..., None]
+        ht = jnp.einsum("bhvk,bhk->bhv", C, qt) / denom
+        return (C, n, m_new), ht
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          i_log.transpose(1, 0, 2), f_log.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    out = hs.transpose(1, 0, 2, 3).astype(x.dtype)      # (B,S,H,hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), state
+
+
+# ================================================================== sLSTM
+
+def init_slstm(key, cfg: ModelConfig, n_layers: int):
+    d = cfg.d_model
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 2)
+    L = (n_layers,)
+    params = {
+        "wx": _dense_init(ks[0], L + (d, 4, d), d, jnp.float32),
+        "wr": _dense_init(ks[1], L + (d, 4, d), d, jnp.float32),
+    }
+    axes = {"wx": ("layers", "embed", None, "mlp"),
+            "wr": ("layers", "embed", None, "mlp")}
+    return params, axes
+
+
+def apply_slstm(p, x, cfg: ModelConfig, *, state=None):
+    """sLSTM with exponential input gate and normalizer state.
+
+    state = (c, n, h, m): each (B, D) f32.  Sequential by construction
+    (the recurrent R connection is the whole point of sLSTM).
+    """
+    b, s, d = x.shape
+    gx = jnp.einsum("bsd,dge->bsge", x.astype(jnp.float32), p["wx"])
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = (z, z, z, jnp.full((b, d), -1e30, jnp.float32))
+
+    def step(carry, gxt):
+        c, n, h, m = carry
+        gr = jnp.einsum("bd,dge->bge", h, p["wr"])
+        g = gxt + gr                                     # (B,4,D)
+        i_log, f_raw, z_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        f_log = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_s = jnp.exp(i_log - m_new)
+        f_s = jnp.exp(f_log + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(z_raw)
+        n = f_s * n + i_s
+        h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, gx.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2).astype(x.dtype), state

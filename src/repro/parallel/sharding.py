@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules -> NamedShardings (DP/TP/EP/FSDP + pod).
+
+Every parameter carries a tuple of logical axis names (models/*.py ``axes``
+trees).  Rules map logical names to mesh axes; a dimension that does not
+divide the mesh axis size is replicated instead (recorded — the roofline
+notes call these out, e.g. hymba's 25 heads on a 16-way model axis).
+
+Mesh contract (launch/mesh.py): axes ``(data, model)`` single-pod or
+``(pod, data, model)`` multi-pod.  ``batch`` shards over (pod, data);
+``fsdp``-tagged weight dims shard over the same product when cfg.fsdp.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _mesh_axes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+LOGICAL_TO_MESH = {
+    "batch": "DATA",          # resolved to (pod, data)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "embed": "FSDP",          # resolved to (pod, data) when cfg.fsdp
+    "kv_seq": "model",
+    "head_dim": None,
+    "layers": None,
+    "repeat": None,
+}
+
+
+def resolve_axis(logical: str | None, mesh: Mesh, *, fsdp: bool):
+    if logical is None:
+        return None
+    kind = LOGICAL_TO_MESH.get(logical)
+    if kind == "DATA":
+        axes = data_axes(mesh)
+        return axes if len(axes) > 1 else axes[0]
+    if kind == "FSDP":
+        if not fsdp:
+            return None
+        axes = data_axes(mesh)
+        return axes if len(axes) > 1 else axes[0]
+    return kind
+
+
+def _axis_size(mesh: Mesh, resolved) -> int:
+    sizes = _mesh_axes(mesh)
+    if resolved is None:
+        return 1
+    if isinstance(resolved, tuple):
+        n = 1
+        for a in resolved:
+            n *= sizes[a]
+        return n
+    return sizes[resolved]
+
+
+def spec_for(dim_sizes: tuple[int, ...], logical_axes: tuple,
+             mesh: Mesh, *, fsdp: bool = True,
+             report: list | None = None) -> P:
+    """Build a PartitionSpec; skip axes that don't divide evenly."""
+    parts = []
+    used = set()
+    for size, logical in zip(dim_sizes, logical_axes):
+        resolved = resolve_axis(logical, mesh, fsdp=fsdp)
+        flat = tuple(resolved) if isinstance(resolved, tuple) else \
+            ((resolved,) if resolved else ())
+        if resolved is None or used & set(flat):
+            parts.append(None)
+            continue
+        if size % _axis_size(mesh, resolved) != 0:
+            if report is not None:
+                report.append((logical, size, resolved))
+            parts.append(None)
+            continue
+        used.update(flat)
+        parts.append(resolved)
+    return P(*parts)
+
+
+def _lookup_axes(axes_tree, path):
+    node = axes_tree
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            node = node[k.key]
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            node = node[k.idx]
+        else:                                   # GetAttrKey etc.
+            node = getattr(node, k.name)
+    return node
+
+
+def shardings_for_tree(params, axes_tree, mesh: Mesh, *, fsdp: bool = True,
+                       report: list | None = None):
+    """NamedSharding tree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    ``axes_tree`` mirrors the params dict structure with logical-axis tuples
+    at the leaves (tuples are containers to jax pytrees, hence the path-based
+    lookup rather than a two-tree map).
+    """
+    def one(path, leaf):
+        ax = _lookup_axes(axes_tree, path)
+        spec = spec_for(tuple(leaf.shape), tuple(ax), mesh, fsdp=fsdp,
+                        report=report)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    axes = data_axes(mesh)
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def block_compute_shardings(blocks_sds, blocks_axes, mesh: Mesh):
+    """Per-layer *compute* shardings for scanned block params: the leading
+    ``layers`` stacking axis is dropped (scan slices it) and fsdp axes are
+    gathered (mapped to None), keeping only tensor-parallel (model) axes.
+
+    Constraining the scan-body weight slices to these shardings forces
+    GSPMD into the FSDP pattern — all-gather the layer's weights over the
+    data axis, compute, and reduce-scatter the weight gradients — instead
+    of the partial-sum strategy (activation-sized all-reduces per layer)
+    it otherwise picks.  §Perf quantifies the difference.
+    """
+    def one(path, leaf):
+        ax = _lookup_axes(blocks_axes, path)
+        spec = spec_for(tuple(leaf.shape)[1:], tuple(ax)[1:], mesh,
+                        fsdp=False)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, blocks_sds)
+
+
+# ---- activation constraint helpers (used by hillclimb variants) ----------
+
+def constrain(x, mesh: Mesh, *dims):
+    """with_sharding_constraint by logical dims, e.g. constrain(x, mesh,
+    'batch', None, 'heads')."""
+    parts = []
+    used = set()
+    for d in dims:
+        r = resolve_axis(d, mesh, fsdp=True)
+        flat = tuple(r) if isinstance(r, tuple) else ((r,) if r else ())
+        if r is None or used & set(flat):
+            parts.append(None)
+        else:
+            used.update(flat)
+            parts.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,156 @@
+"""SiM-paged KV cache: the paper's technique as a first-class serving
+feature (DESIGN.md §2, last row of the mapping table).
+
+A vLLM-style paged KV cache needs a *block table*: (sequence, logical
+block) -> physical page.  That table is exactly the kind of index the paper
+accelerates — fixed-width keys, masked point lookups, high fan-out — so
+here it lives on SiM flash pages and is queried with real ``search`` /
+``gather`` commands through the functional chip engine:
+
+    key slot (8 B, BitWeaving):  [seq_id:24 | logical_block:20 | phys:20]
+
+A lookup masks out the ``phys`` field and matches on (seq_id, block); the
+matching slot's own bits carry the physical page id (single-page lookup =
+one search command, no gather needed — cheaper than the generic two-page
+schema of §V-A).  De-allocation and sequence eviction reuse the §V-D
+keyspace-partition trick: one masked search per sequence isolates all its
+table entries.
+
+The KV payload pool is an ordinary jax array (HBM); only the *index* rides
+SiM — mirroring the paper's data/metadata separation (Fig 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import unpack_bitmap
+from repro.core.bitweaving import Column, RowCodec
+from repro.core.commands import Command
+from repro.core.engine import SimChipArray
+from repro.core.page import USER_SLOTS, mask_header_slots
+from repro.models.config import ModelConfig
+
+TABLE_CODEC = RowCodec([Column("seq", 24), Column("block", 20),
+                        Column("phys", 20)])
+
+
+@dataclasses.dataclass
+class PagedStats:
+    searches: int = 0
+    programs: int = 0
+    pages_allocated: int = 0
+    pages_freed: int = 0
+
+
+class SimPagedKVCache:
+    """Physical KV page pool + SiM-resident block table (single layer-stack
+    pool; layers index the same physical pages at different strides)."""
+
+    def __init__(self, cfg: ModelConfig, *, n_pages: int,
+                 page_tokens: int = 16, table_pages: int = 8,
+                 n_chips: int = 4):
+        self.cfg = cfg
+        self.page_tokens = page_tokens
+        self.n_pages = n_pages
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, n_pages, page_tokens, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.pool_k = jnp.zeros(shape, dt)
+        self.pool_v = jnp.zeros(shape, dt)
+        self.chips = SimChipArray(n_chips=n_chips,
+                                  pages_per_chip=table_pages)
+        self.table_pages = table_pages
+        self._entries: list[int] = [[] for _ in range(table_pages)]
+        self._entries = {p: [] for p in range(table_pages)}
+        self._free = list(range(n_pages - 1, -1, -1))
+        self._seq_blocks: dict[int, int] = {}     # seq -> #blocks
+        self.stats = PagedStats()
+        for p in range(table_pages):
+            self.chips.program_entries(p, np.zeros(0, dtype=np.uint64))
+
+    # ------------------------------------------------------------ table io
+    def _table_page_of(self, seq_id: int) -> int:
+        return seq_id % self.table_pages
+
+    def _reprogram(self, page: int) -> None:
+        self.chips.program_entries(
+            page, np.array(self._entries[page], dtype=np.uint64))
+        self.stats.programs += 1
+
+    def allocate(self, seq_id: int, logical_block: int) -> int:
+        if not self._free:
+            raise RuntimeError("KV pool exhausted")
+        phys = self._free.pop()
+        key = TABLE_CODEC.encode(seq=seq_id, block=logical_block, phys=phys)
+        page = self._table_page_of(seq_id)
+        if len(self._entries[page]) >= USER_SLOTS:
+            raise RuntimeError("block-table page full")
+        self._entries[page].append(key)
+        self._reprogram(page)
+        self._seq_blocks[seq_id] = max(self._seq_blocks.get(seq_id, 0),
+                                       logical_block + 1)
+        self.stats.pages_allocated += 1
+        return phys
+
+    def lookup(self, seq_id: int, logical_block: int) -> int | None:
+        """One masked search command -> physical page id."""
+        mq_seq = TABLE_CODEC.equals("seq", seq_id)
+        mq_blk = TABLE_CODEC.equals("block", logical_block)
+        query = mq_seq.query | mq_blk.query
+        mask = mq_seq.mask | mq_blk.mask          # phys field = don't care
+        page = self._table_page_of(seq_id)
+        resp = self.chips.search(Command.search(page, query, mask))
+        self.stats.searches += 1
+        bitmap = mask_header_slots(resp.bitmap_words)
+        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+        slots = slots[slots - 8 < len(self._entries[page])]
+        if slots.size == 0:
+            return None
+        entry = self._entries[page][int(slots[0]) - 8]
+        return TABLE_CODEC.decode(entry, "phys")
+
+    def free_sequence(self, seq_id: int) -> int:
+        """§V-D partition-style eviction: one masked search isolates every
+        entry of the sequence, freed in one sweep."""
+        mq = TABLE_CODEC.equals("seq", seq_id)
+        page = self._table_page_of(seq_id)
+        resp = self.chips.search(Command.search(page, mq.query, mq.mask))
+        self.stats.searches += 1
+        bitmap = mask_header_slots(resp.bitmap_words)
+        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+        freed = 0
+        keep = []
+        for i, key in enumerate(self._entries[page]):
+            if TABLE_CODEC.decode(key, "seq") == seq_id:
+                self._free.append(TABLE_CODEC.decode(key, "phys"))
+                freed += 1
+            else:
+                keep.append(key)
+        assert freed == int((slots - 8 < len(self._entries[page])).sum())
+        self._entries[page] = keep
+        self._reprogram(page)
+        self._seq_blocks.pop(seq_id, None)
+        self.stats.pages_freed += freed
+        return freed
+
+    # ----------------------------------------------------------- kv access
+    def write_token(self, seq_id: int, position: int, k, v) -> None:
+        """k, v: (L, Kh, hd) for one token."""
+        block, off = divmod(position, self.page_tokens)
+        phys = self.lookup(seq_id, block)
+        if phys is None:
+            phys = self.allocate(seq_id, block)
+        self.pool_k = self.pool_k.at[:, phys, off].set(k)
+        self.pool_v = self.pool_v.at[:, phys, off].set(v)
+
+    def gather_sequence(self, seq_id: int, length: int):
+        """Contiguous (L, length, Kh, hd) view for attention."""
+        n_blocks = -(-length // self.page_tokens)
+        phys = [self.lookup(seq_id, b) for b in range(n_blocks)]
+        assert all(p is not None for p in phys), "missing KV page"
+        k = jnp.concatenate([self.pool_k[:, p] for p in phys], axis=1)
+        v = jnp.concatenate([self.pool_v[:, p] for p in phys], axis=1)
+        return k[:, :length], v[:, :length]

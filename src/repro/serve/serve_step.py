@@ -1,0 +1,32 @@
+"""Serving steps: prefill and decode as jittable pure functions.
+
+``decode_32k`` / ``long_500k`` dry-run cells lower ``serve_decode_step`` —
+one new token against a resident cache (contiguous, ring for sliding-window
+archs, or recurrent state for ssm/hybrid).  The SiM-paged cache variant
+(serve/kvcache.py) is exercised by examples/serve_lm.py and tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, prefill
+
+
+def serve_prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
+                  frontend_embeds=None, block_specs=None, act_spec=None):
+    return prefill(params, cfg, tokens, cache_len,
+                   frontend_embeds=frontend_embeds, block_specs=block_specs,
+                   act_spec=act_spec)
+
+
+def serve_decode_step(params, cfg: ModelConfig, token, caches, index, *,
+                      enc_out=None, block_specs=None, act_spec=None):
+    """token (B,1) int32; index: absolute position scalar.  Greedy-samples
+    the next token so the serving loop is self-contained."""
+    logits, caches = decode_step(params, cfg, token, caches, index,
+                                 enc_out=enc_out, block_specs=block_specs,
+                                 act_spec=act_spec)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return next_token, logits, caches

@@ -1,0 +1,69 @@
+"""YCSB-like workload generation (paper §VI-A4/A5).
+
+Key popularity follows a (scrambled) Zipf over key ranks with parameter
+alpha in {0 (uniform), 0.5 (skewed), 0.9 (very skewed)}; read ratio and
+cache-coverage grids mirror the paper's figures.  Keys map to (key page,
+value page) pairs of the generic index of Fig 11: 504 keys per 4 KiB page,
+key and value pages disjoint halves of the page space.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+KEYS_PER_PAGE = 504
+
+
+def zipf_probs(n: int, alpha: float) -> np.ndarray:
+    if alpha <= 0.0:
+        return np.full(n, 1.0 / n)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-alpha)
+    return w / w.sum()
+
+
+def concentration_table(n: int, alpha: float, top: int = 4) -> np.ndarray:
+    """Fraction of queries landing on the top-k keys (paper Table III)."""
+    return zipf_probs(n, alpha)[:top]
+
+
+@dataclasses.dataclass
+class Workload:
+    ops: np.ndarray          # (N,) uint8: 0 = read, 1 = write
+    key_pages: np.ndarray    # (N,) int32
+    value_pages: np.ndarray  # (N,) int32
+    alpha: float
+    read_ratio: float
+    n_index_pages: int
+
+
+def generate(n_queries: int, *, n_key_pages: int, read_ratio: float,
+             alpha: float, seed: int = 0, scramble: bool = True) -> Workload:
+    """Generate a closed-loop query stream.
+
+    ``n_key_pages`` pages of keys; each key page i pairs with value page
+    ``n_key_pages + i`` (the §V-A two-page leaf layout).  With ``scramble``
+    the popularity ranks are permuted across the keyspace so rank-adjacent
+    hot keys do not collapse onto one page (YCSB's scrambled zipfian).
+    """
+    rng = np.random.default_rng(seed)
+    n_keys = n_key_pages * KEYS_PER_PAGE
+    probs = zipf_probs(n_keys, alpha)
+    ranks = rng.choice(n_keys, size=n_queries, p=probs)
+    if scramble:
+        perm = rng.permutation(n_keys)
+        keys = perm[ranks]
+    else:
+        keys = ranks
+    key_pages = (keys // KEYS_PER_PAGE).astype(np.int32)
+    # §V-A leaf layout: the value page of key page i lives in the second half
+    # of the address space, *rotated by one* so the pair always lands on two
+    # different dies — the controller placement that makes the chip-internal
+    # search->gather pipelining effective (and keeps both page buffers
+    # latched for hot leaves).
+    value_pages = n_key_pages + (key_pages + 1) % n_key_pages
+    ops = (rng.random(n_queries) >= read_ratio).astype(np.uint8)
+    return Workload(ops=ops, key_pages=key_pages,
+                    value_pages=value_pages.astype(np.int32), alpha=alpha,
+                    read_ratio=read_ratio, n_index_pages=2 * n_key_pages)

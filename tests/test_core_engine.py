@@ -1,0 +1,133 @@
+"""Unit tests: SimChip functional model — commands, latch pipeline, integrity."""
+import numpy as np
+import pytest
+
+from repro.core import (Command, EccConfig, OpenVerdict, SimChip,
+                        SimChipArray, pair_to_u64, unpack_bitmap)
+from repro.core.bits import chunk_bitmap_from_slot_bitmap
+from repro.core.page import SLOTS_PER_CHUNK
+
+
+@pytest.fixture
+def chip():
+    c = SimChip(n_pages=32, device_seed=11)
+    c.program_entries(2, np.arange(5000, 5504, dtype=np.uint64),
+                      timestamp_ns=1)
+    return c
+
+
+def test_search_finds_exact_slot(chip):
+    r = chip.search(Command.search(2, 5123))
+    assert r.match_count == 1
+    slot = int(np.nonzero(unpack_bitmap(r.bitmap_words, 512))[0][0])
+    assert slot == SLOTS_PER_CHUNK + (5123 - 5000)
+
+
+def test_search_miss(chip):
+    assert chip.search(Command.search(2, 999_999)).match_count == 0
+
+
+def test_search_with_mask_matches_prefix(chip):
+    # keys 5000..5503; mask off the low 9 bits -> match whole aligned block
+    mask = 0xFFFFFFFFFFFFFE00
+    r = chip.search(Command.search(2, 5120, mask))
+    keys = np.arange(5000, 5504, dtype=np.uint64)
+    expected = int(((keys & np.uint64(mask)) == (5120 & mask)).sum())
+    assert r.match_count == expected
+
+
+def test_gather_returns_derandomized_chunks(chip):
+    r = chip.search(Command.search(2, 5123))
+    cb = chunk_bitmap_from_slot_bitmap(r.bitmap_words)
+    g = chip.gather(Command.gather(2, pair_to_u64(*cb)))
+    assert g.chunk_ids.size == 1 and g.parity_ok.all()
+    # the slot's bytes inside the gathered chunk decode back to the key
+    slot = SLOTS_PER_CHUNK + (5123 - 5000)
+    off = (slot % 8) * 8
+    val = int.from_bytes(bytes(g.chunks[0][off:off + 8]), "little")
+    assert val == 5123
+
+
+def test_latch_pipeline_overlap(chip):
+    chip.program_entries(3, np.arange(10, dtype=np.uint64))
+    chip.page_open(2)
+    chip.page_close(2)
+    # opening page 3 while page 2 is matched from L2 counts as pipelined
+    chip.page_open(3)
+    assert chip.counters.pipelined_opens >= 1
+    r = chip.search(Command.search(2, 5000))     # L2 still holds page 2
+    assert r.match_count == 1
+
+
+def test_page_close_requires_l1(chip):
+    with pytest.raises(RuntimeError):
+        chip.page_close(9)
+
+
+def test_body_errors_are_invisible_to_optimistic_check(chip):
+    """The acknowledged §IV-C2 risk: body-only damage passes page_open."""
+    chip.inject_bit_errors(2, 3, byte_region=(64, 4096))
+    res, _ = chip.page_open(2, now_ns=2)
+    assert res.verdict is OpenVerdict.CLEAN
+    # ...but the concatenated inner code catches it at gather time.
+    chip.page_close(2)
+    g = chip.gather(Command.gather(2, 0xFFFFFFFFFFFFFFFF))
+    assert not g.parity_ok.all()
+
+
+def test_header_errors_trigger_fallback_and_repair(chip):
+    chip.inject_bit_errors(2, 4, byte_region=(0, 64))
+    res, _ = chip.page_open(2, now_ns=2)
+    assert res.verdict is OpenVerdict.FALLBACK_ECC
+    assert chip.counters.open_fallbacks == 1
+    assert chip.search(Command.search(2, 5123)).match_count == 1
+
+
+def test_uncorrectable_after_retries():
+    c = SimChip(n_pages=4, ecc_cfg=EccConfig(t_correctable=2,
+                                             max_read_retries=2,
+                                             retry_fix_prob=0.0))
+    c.program_entries(0, np.arange(4, dtype=np.uint64))
+    c.inject_bit_errors(0, 30, byte_region=(0, 64))
+    res, _ = c.page_open(0)
+    assert res.verdict is OpenVerdict.UNCORRECTABLE
+
+
+def test_read_full_roundtrip(chip):
+    plain = chip.read_full(2).plain
+    from repro.core.page import entries_from_plain
+    assert np.array_equal(entries_from_plain(plain, 504),
+                          np.arange(5000, 5504, dtype=np.uint64))
+
+
+def test_unprogrammed_page_raises(chip):
+    with pytest.raises(KeyError):
+        chip.read_full(31)
+
+
+def test_chip_array_routing():
+    arr = SimChipArray(n_chips=4, pages_per_chip=8)
+    for p in range(16):
+        arr.program_entries(p, np.array([p * 1000 + 1], dtype=np.uint64))
+    for p in range(16):
+        assert arr.search(Command.search(p, p * 1000 + 1)).match_count == 1
+    # chips got striped evenly
+    assert all(len(c.pages) == 4 for c in arr.chips)
+
+
+def test_header_aliasing_stripped_by_software(chip):
+    """A query equal to a zeroed header field aliases into chunk 0; the
+    software-side mask_header_slots strips it (page.py helper)."""
+    from repro.core.page import mask_header_slots
+    chip.program_entries(4, np.array([0], dtype=np.uint64), timestamp_ns=0)
+    r = chip.search(Command.search(4, 0))
+    assert r.match_count > 1          # raw chip result includes header hits
+    cleaned = mask_header_slots(r.bitmap_words)
+    idx = np.nonzero(unpack_bitmap(cleaned, 512))[0]
+    assert list(idx) == [SLOTS_PER_CHUNK]   # only the real entry survives
+
+
+def test_empty_mask_matches_everything(chip):
+    """mask==0: every slot matches (the redistribution full-select §V-D)."""
+    r = chip.search(Command.search(2, 0, 0))
+    assert r.match_count == 512

@@ -1,0 +1,140 @@
+"""Unit tests: page layout, randomization, verification header, optimistic ECC."""
+import numpy as np
+import pytest
+
+from repro.core import (CHUNKS_PER_PAGE, EMPTY_SLOT, PAGE_BYTES, USER_SLOTS,
+                        EccConfig, OpenVerdict, build_page)
+from repro.core import ecc
+from repro.core.bits import (bytes_to_slot_words, pairs_to_u64_array,
+                             slot_words_to_bytes, u64_array_to_pairs,
+                             u64_to_pair, pair_to_u64, pack_bitmap,
+                             unpack_bitmap)
+from repro.core.page import entries_from_plain
+from repro.core.randomize import (chunk_stream_words, randomize_page_words,
+                                  randomize_query, stream_words)
+
+
+def test_u64_pair_roundtrip():
+    for v in [0, 1, 0xDEADBEEF, 0xFFFFFFFFFFFFFFFF, 1 << 63]:
+        lo, hi = u64_to_pair(v)
+        assert pair_to_u64(lo, hi) == v
+
+
+def test_u64_array_pair_roundtrip():
+    v = np.random.default_rng(0).integers(0, 2**63, size=100).astype(np.uint64)
+    assert np.array_equal(pairs_to_u64_array(u64_array_to_pairs(v)), v)
+
+
+def test_bitmap_pack_unpack_roundtrip():
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, size=(7, 512)).astype(np.uint32)
+    assert np.array_equal(unpack_bitmap(pack_bitmap(bits)), bits)
+
+
+def test_byte_slot_view_roundtrip():
+    rng = np.random.default_rng(2)
+    page = rng.integers(0, 256, size=PAGE_BYTES).astype(np.uint8)
+    assert np.array_equal(slot_words_to_bytes(bytes_to_slot_words(page)), page)
+
+
+def test_build_page_layout_and_recovery():
+    keys = np.arange(1000, 1504, dtype=np.uint64)   # exactly 504 entries
+    built = build_page(keys, page_addr=5, timestamp_ns=42)
+    assert built.plain.size == PAGE_BYTES
+    rec = entries_from_plain(built.plain, 504)
+    assert np.array_equal(rec, keys)
+
+
+def test_build_page_vacant_slots_are_empty_sentinel():
+    built = build_page(np.array([7], dtype=np.uint64), page_addr=0)
+    rec = entries_from_plain(built.plain, USER_SLOTS)
+    assert rec[0] == 7
+    assert (rec[1:] == EMPTY_SLOT).all()
+
+
+def test_build_page_overflow_rejected():
+    with pytest.raises(ValueError):
+        build_page(np.zeros(505, dtype=np.uint64), page_addr=0)
+
+
+def test_randomization_is_involution_and_chunk_addressed():
+    words = bytes_to_slot_words(
+        np.random.default_rng(3).integers(0, 256, PAGE_BYTES).astype(np.uint8))
+    r1 = randomize_page_words(words, page_addr=9)
+    assert not np.array_equal(r1, words)
+    assert np.array_equal(randomize_page_words(r1, page_addr=9), words)
+    # per-chunk stream equals the page stream slice (gather de-randomization)
+    full = stream_words(9)
+    for c in [0, 13, 63]:
+        np.testing.assert_array_equal(
+            chunk_stream_words(9, c), full[c * 8:(c + 1) * 8])
+
+
+def test_query_randomization_cancels():
+    """(data ^ stream) ^ (query ^ stream) == data ^ query — §IV-C1."""
+    rng = np.random.default_rng(4)
+    words = bytes_to_slot_words(
+        rng.integers(0, 256, PAGE_BYTES).astype(np.uint8))
+    q = np.array(u64_to_pair(0x1234_5678_9ABC_DEF0), dtype=np.uint32)
+    stored = randomize_page_words(words, page_addr=17)
+    rq = randomize_query(q, page_addr=17)
+    assert np.array_equal(stored ^ rq, words ^ q[None, :])
+
+
+def test_header_roundtrip_and_crc():
+    chunk = ecc.build_header_chunk(timestamp_ns=123456789)
+    h = ecc.parse_header_chunk(chunk)
+    assert h.crc_ok and h.magic_ok and h.timestamp_ns == 123456789
+    # any single-bit flip in the body must break the CRC
+    bad = chunk.copy()
+    bad[17] ^= 0x20
+    hb = ecc.parse_header_chunk(bad)
+    assert not hb.crc_ok
+
+
+def test_crc32_chunks_matches_scalar():
+    rng = np.random.default_rng(5)
+    page = rng.integers(0, 256, PAGE_BYTES).astype(np.uint8)
+    vec = ecc.crc32_chunks(page)
+    for c in [0, 31, 63]:
+        assert vec[c] == ecc.crc32(page[c * 64:(c + 1) * 64])
+
+
+def test_optimistic_open_clean_fast_path():
+    chunk = ecc.build_header_chunk(timestamp_ns=0)
+    res = ecc.optimistic_open(chunk, now_ns=10, injected_error_bits=0,
+                              cfg=EccConfig())
+    assert res.verdict is OpenVerdict.CLEAN
+
+
+def test_optimistic_open_stale_refresh():
+    cfg = EccConfig(refresh_margin_ns=100)
+    chunk = ecc.build_header_chunk(timestamp_ns=0)
+    res = ecc.optimistic_open(chunk, now_ns=1000, injected_error_bits=0,
+                              cfg=cfg)
+    assert res.verdict is OpenVerdict.CLEAN_NEEDS_REFRESH
+
+
+def test_optimistic_open_fallback_and_uncorrectable():
+    cfg = EccConfig(t_correctable=10, max_read_retries=3, retry_fix_prob=0.0)
+    chunk = ecc.build_header_chunk(timestamp_ns=0)
+    bad = chunk.copy()
+    bad[9] ^= 0xFF
+    res = ecc.optimistic_open(bad, now_ns=0, injected_error_bits=5, cfg=cfg)
+    assert res.verdict is OpenVerdict.FALLBACK_ECC
+    assert res.bits_corrected == 5
+    res2 = ecc.optimistic_open(bad, now_ns=0, injected_error_bits=50, cfg=cfg)
+    assert res2.verdict is OpenVerdict.UNCORRECTABLE
+    assert res2.retries_used == 3
+
+
+def test_chunk_parity_verify():
+    built = build_page(np.arange(100, dtype=np.uint64), page_addr=0)
+    ok = ecc.verify_chunks(built.plain, built.chunk_parities,
+                           np.arange(CHUNKS_PER_PAGE))
+    assert ok.all()
+    damaged = built.plain.copy()
+    damaged[200] ^= 1          # chunk 3
+    ok2 = ecc.verify_chunks(damaged, built.chunk_parities,
+                            np.arange(CHUNKS_PER_PAGE))
+    assert not ok2[3] and ok2[[0, 1, 2] + list(range(4, 64))].all()

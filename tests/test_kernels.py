@@ -1,0 +1,209 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose vs ref.py.
+
+Kernels run under interpret=True (CPU container); the same code lowers to
+Mosaic on TPU.  Each sweep covers page counts that exercise grid padding,
+multiple block sizes, and the randomized-store path.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bits import (pack_bitmap, u64_array_to_pairs, unpack_bitmap)
+from repro.core.page import build_page
+from repro.kernels.layout import (chunk_words_to_pages, pages_to_chunk_words,
+                                  pages_to_planes, planes_to_pages)
+from repro.kernels.sim_search.ops import sim_search, sim_search_pages
+from repro.kernels.sim_search.ref import sim_search_ref
+from repro.kernels.sim_gather.ops import sim_gather
+from repro.kernels.sim_gather.ref import sim_gather_ref
+from repro.kernels.sim_fused.ops import sim_fused
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+FULL = 0xFFFFFFFFFFFFFFFF
+
+
+def _random_planes(n_pages, seed=0):
+    rng = np.random.default_rng(seed)
+    lo = rng.integers(0, 2**32, size=(n_pages, 512), dtype=np.uint64
+                      ).astype(np.uint32)
+    hi = rng.integers(0, 2**32, size=(n_pages, 512), dtype=np.uint64
+                      ).astype(np.uint32)
+    return lo, hi
+
+
+def test_layout_roundtrips():
+    rng = np.random.default_rng(1)
+    pages = rng.integers(0, 256, size=(5, 4096)).astype(np.uint8)
+    lo, hi = pages_to_planes(pages)
+    assert np.array_equal(planes_to_pages(lo, hi), pages)
+    cw = pages_to_chunk_words(pages)
+    assert np.array_equal(chunk_words_to_pages(cw), pages)
+
+
+# ------------------------------------------------------------- sim_search
+
+@pytest.mark.parametrize("n_pages", [1, 3, 32, 70])
+@pytest.mark.parametrize("n_queries", [1, 5])
+def test_sim_search_shape_sweep(n_pages, n_queries):
+    lo, hi = _random_planes(n_pages, seed=n_pages)
+    rng = np.random.default_rng(n_pages + 100)
+    q = rng.integers(0, 2**32, size=(n_queries, 2), dtype=np.uint64
+                     ).astype(np.uint32)
+    m = rng.integers(0, 2**32, size=(n_queries, 2), dtype=np.uint64
+                     ).astype(np.uint32)
+    out = sim_search(lo, hi, q, m, page_block=16)
+    ref = sim_search_ref(lo, hi, q, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert out.shape == (n_queries, n_pages, 16)
+
+
+@pytest.mark.parametrize("page_block", [8, 32])
+def test_sim_search_block_sweep(page_block):
+    lo, hi = _random_planes(64, seed=3)
+    q = np.array([[lo[7, 99], hi[7, 99]]], dtype=np.uint32)  # plant a hit
+    m = np.array([[FULL & 0xFFFFFFFF, FULL >> 32]], dtype=np.uint32)
+    out = np.asarray(sim_search(lo, hi, q, m, page_block=page_block))
+    bits = unpack_bitmap(out[0], xp=np)
+    assert bits[7, 99] == 1
+
+
+def test_sim_search_randomized_matches_plain():
+    """Randomized store + randomized query == plain search (§IV-C1)."""
+    keys = np.arange(7000, 7504, dtype=np.uint64)
+    plain_pages = np.stack([
+        build_page(keys + 504 * p, p, randomize=False).plain
+        for p in range(4)])
+    rand_pages = np.stack([
+        build_page(keys + 504 * p, p, device_seed=5).raw for p in range(4)])
+    out_plain = sim_search_pages(plain_pages, [7100], [FULL])
+    out_rand = sim_search_pages(rand_pages, [7100], [FULL],
+                                randomized=True, device_seed=5)
+    np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_rand))
+
+
+def test_sim_search_mask_semantics():
+    lo, hi = _random_planes(8, seed=9)
+    # mask = 0 matches everything
+    q = np.zeros((1, 2), dtype=np.uint32)
+    m = np.zeros((1, 2), dtype=np.uint32)
+    out = np.asarray(sim_search(lo, hi, q, m))
+    assert unpack_bitmap(out[0], xp=np).all()
+
+
+# ------------------------------------------------------------- sim_gather
+
+@pytest.mark.parametrize("n_pages", [1, 16, 33])
+@pytest.mark.parametrize("max_out", [4, 16, 64])
+def test_sim_gather_shape_sweep(n_pages, max_out):
+    rng = np.random.default_rng(n_pages * 7 + max_out)
+    chunks = rng.integers(0, 2**32, size=(n_pages, 64, 16), dtype=np.uint64
+                          ).astype(np.uint32)
+    bm_u64 = rng.integers(0, 2**64, size=n_pages, dtype=np.uint64)
+    bm = u64_array_to_pairs(bm_u64)
+    out, cnt = sim_gather(chunks, bm, max_out=max_out, page_block=8)
+    ref_out, ref_cnt = sim_gather_ref(chunks, bm, max_out)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(ref_cnt))
+
+
+def test_sim_gather_order_and_content():
+    chunks = np.arange(1 * 64 * 16, dtype=np.uint32).reshape(1, 64, 16)
+    bm = u64_array_to_pairs(np.array([(1 << 3) | (1 << 40) | (1 << 63)],
+                                     dtype=np.uint64))
+    out, cnt = sim_gather(chunks, bm, max_out=8)
+    out = np.asarray(out)
+    assert int(np.asarray(cnt)[0]) == 3
+    np.testing.assert_array_equal(out[0, 0], chunks[0, 3])
+    np.testing.assert_array_equal(out[0, 1], chunks[0, 40])
+    np.testing.assert_array_equal(out[0, 2], chunks[0, 63])
+    assert (out[0, 3:] == 0).all()
+
+
+def test_sim_gather_overflow_truncates_but_counts():
+    chunks = np.ones((1, 64, 16), dtype=np.uint32)
+    bm = u64_array_to_pairs(np.array([FULL], dtype=np.uint64))
+    out, cnt = sim_gather(chunks, bm, max_out=4)
+    assert int(np.asarray(cnt)[0]) == 64        # true count reported
+    assert np.asarray(out).shape == (1, 4, 16)  # only 4 shipped
+
+
+def test_sim_gather_extreme_words_exact():
+    """The split-16 MXU trick must be exact for 0xFFFFFFFF etc."""
+    chunks = np.full((2, 64, 16), 0xFFFFFFFF, dtype=np.uint32)
+    chunks[0, 5] = 0xDEADBEEF
+    bm = u64_array_to_pairs(np.array([1 << 5, 1 << 0], dtype=np.uint64))
+    out, _ = sim_gather(chunks, bm, max_out=2)
+    assert (np.asarray(out)[0, 0] == 0xDEADBEEF).all()
+    assert (np.asarray(out)[1, 0] == 0xFFFFFFFF).all()
+
+
+# ------------------------------------------------------------- sim_fused
+
+@pytest.mark.parametrize("n_pages", [2, 17])
+def test_sim_fused_matches_ref(n_pages):
+    lo, hi = _random_planes(n_pages, seed=n_pages + 50)
+    q = np.array([lo[0, 10], hi[0, 10]], dtype=np.uint32)
+    m = np.array([0xFFFFFFFF, 0xFFFFFFFF], dtype=np.uint32)
+    got = sim_fused(lo, hi, q, m, max_out=8, page_block=8)
+    ref = sim_fused(lo, hi, q, m, max_out=8, use_kernel=False)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_sim_fused_gathers_matching_chunk():
+    keys = np.arange(100, 604, dtype=np.uint64)
+    pages = np.stack([build_page(keys, p, randomize=False).plain
+                      for p in range(3)])
+    lo, hi = pages_to_planes(pages)
+    q = u64_array_to_pairs(np.array([307], dtype=np.uint64))[0]
+    m = u64_array_to_pairs(np.array([FULL], dtype=np.uint64))[0]
+    bm, g, cnt = sim_fused(lo, hi, q, m, max_out=2)
+    slot = 8 + (307 - 100)
+    bits = unpack_bitmap(np.asarray(bm), xp=np)
+    assert (np.nonzero(bits[0])[0] == [slot]).all()
+    cw = pages_to_chunk_words(pages)
+    np.testing.assert_array_equal(np.asarray(g)[0, 0], cw[0, slot // 8])
+    assert list(np.asarray(cnt)) == [1, 1, 1]
+
+
+# -------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 128)])
+def test_flash_attention_sweep(dtype, causal, window):
+    rng = np.random.default_rng(0)
+    B, S, H, HKV, D = 2, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, HKV, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, HKV, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_sweep(blocks):
+    bq, bk = blocks
+    rng = np.random.default_rng(1)
+    B, S, H, HKV, D = 1, 256, 2, 1, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, HKV, D)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+def test_flash_attention_decode_fallback():
+    """Sq=1 decode goes through the dense ref path (documented fallback)."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 1, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 200, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 200, 2, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

@@ -1,0 +1,129 @@
+"""Per-arch smoke tests (assignment f): reduced config of the same family,
+one forward/train step on CPU, asserting output shapes and finiteness —
+plus prefill/decode consistency against the train-mode forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_config, shape_cells
+from repro.models.model import (decode_step, init_model, prefill,
+                                train_logits)
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _frontend(r, key, batch):
+    if r.frontend == "vision_stub":
+        return jax.random.normal(key, (batch, r.frontend_tokens, r.d_model))
+    if r.frontend == "audio_stub":
+        return jax.random.normal(key, (batch, r.encoder_seq, r.d_model))
+    return None
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_forward_shapes_and_finite(name):
+    cfg = reduced_config(ARCHS[name])
+    key = jax.random.PRNGKey(0)
+    params, axes = init_model(key, cfg)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, aux = train_logits(params, cfg, tokens,
+                               frontend_embeds=_frontend(cfg, key, B))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_decreases_loss(name):
+    """Two SGD steps on a tiny batch must reduce the causal LM loss."""
+    cfg = dataclasses.replace(reduced_config(ARCHS[name]), dtype="float32",
+                              remat="none")
+    key = jax.random.PRNGKey(1)
+    params, _ = init_model(key, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = _frontend(cfg, key, B)
+
+    def loss_fn(p):
+        logits, aux = train_logits(p, cfg, tokens, frontend_embeds=fe)
+        tgt = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
+        nll = -jnp.take_along_axis(lp, tgt[..., None], -1).mean()
+        return nll + 0.01 * aux
+
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype),
+                           params, grads)
+    loss1 = loss_fn(params2)
+    assert bool(jnp.isfinite(loss0)) and bool(jnp.isfinite(loss1))
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_consistency(name):
+    """decode_step(prefill(x[:-1]), x[-1]) must equal train forward at the
+    last position (f32, generous capacity so MoE drops nothing; hybrid runs
+    in long-context/SWA-only mode to match its ring-cache decode)."""
+    cfg = reduced_config(ARCHS[name])
+    over = dict(dtype="float32", remat="none")
+    if cfg.is_moe:
+        over["capacity_factor"] = 8.0     # no capacity drops
+    if cfg.family == "hybrid":
+        over["global_attn_every"] = 0     # SWA everywhere (= decode mode)
+    cfg = dataclasses.replace(cfg, **over)
+    key = jax.random.PRNGKey(2)
+    params, _ = init_model(key, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = _frontend(cfg, key, B)
+    full, _ = train_logits(params, cfg, tokens, frontend_embeds=fe)
+    lp, caches = prefill(params, cfg, tokens[:, :S - 1], S,
+                         frontend_embeds=fe)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, S - 2]),
+                               atol=2e-4, rtol=2e-4)
+    # decode the token train saw at position S-1 (vlm prepend shifts text)
+    shift = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    tok = tokens[:, S - 1 - shift: S - shift]
+    ld, _ = decode_step(params, cfg, tok, caches, S - 1,
+                        enc_out=caches.get("enc_out"))
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full[:, S - 1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decode_steps_advance(name):
+    """Several decode steps run, stay finite, and caches update."""
+    cfg = reduced_config(ARCHS[name])
+    key = jax.random.PRNGKey(3)
+    params, _ = init_model(key, cfg)
+    B, S, C = 2, 8, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = _frontend(cfg, key, B)
+    logits, caches = prefill(params, cfg, tokens, C, frontend_embeds=fe)
+    for step in range(3):
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        logits, caches = decode_step(params, cfg, tok, caches, S + step,
+                                     enc_out=caches.get("enc_out"))
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_shape_cells_long_context_policy():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runs = {n for n, c in ARCHS.items()
+            if shape_cells(c)["long_500k"] is not None}
+    assert runs == {"xlstm-350m", "hymba-1.5b", "mixtral-8x22b"}
+
+
+def test_param_counts_match_scale():
+    """Full-config parameter counts are in the advertised ballpark."""
+    assert 7.0e9 < ARCHS["granite-3-8b"].param_count() < 10e9
+    assert 0.9e12 < ARCHS["kimi-k2-1t-a32b"].param_count() < 1.2e12
+    active = ARCHS["kimi-k2-1t-a32b"].active_param_count()
+    assert 2.0e10 < active < 5.0e10          # ~32B active
+    assert 1.2e11 < ARCHS["mixtral-8x22b"].param_count() < 1.8e11
+    assert 0.2e9 < ARCHS["xlstm-350m"].param_count() < 0.9e9

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bits import (pack_bitmap, u64_array_to_pairs, u64_to_pair,
+                             unpack_bitmap)
+from repro.core.match import match_slots, search_page
+from repro.core.page import build_page
+from repro.core.randomize import randomize_page_words, randomize_query
+from repro.kernels.layout import pages_to_planes
+from repro.kernels.sim_search.ref import sim_search_ref
+
+u64s = st.integers(0, 2**64 - 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(u64s, u64s, st.integers(0, 503), st.integers(1, 400))
+def test_search_finds_planted_key(key, mask, pos, n_keys):
+    """A planted key always matches itself under any mask, at its slot."""
+    rng = np.random.default_rng(abs(hash((key, pos))) % 2**32)
+    n = max(n_keys, pos + 1)
+    keys = rng.integers(0, 2**63, size=n, dtype=np.uint64)
+    keys[pos] = key
+    built = build_page(keys, page_addr=0, randomize=False)
+    from repro.core.bits import bytes_to_slot_words
+    words = bytes_to_slot_words(built.plain)
+    bits = match_slots(words, np.array(u64_to_pair(key), np.uint32),
+                       np.array(u64_to_pair(mask), np.uint32))
+    assert bits[8 + pos] == 1          # slot 8+pos (after header chunk)
+
+
+@settings(max_examples=40, deadline=None)
+@given(u64s, u64s, st.integers(0, 2**32 - 1))
+def test_match_invariant_under_randomization(key, other, seed):
+    """match(data^r, query^r) == match(data, query) for any stream r —
+    the §IV-C1 cancellation that makes on-chip matching of randomized
+    pages possible."""
+    rng = np.random.default_rng(seed % 2**32)
+    keys = rng.integers(0, 2**63, size=64, dtype=np.uint64)
+    keys[7] = key
+    built_plain = build_page(keys, page_addr=3, randomize=False)
+    built_rand = build_page(keys, page_addr=3, device_seed=seed,
+                            randomize=True)
+    from repro.core.bits import bytes_to_slot_words
+    plain_words = bytes_to_slot_words(built_plain.plain)
+    rand_words = bytes_to_slot_words(built_rand.raw)
+    q = np.array(u64_to_pair(key), np.uint32)
+    full = np.array([0xFFFFFFFF, 0xFFFFFFFF], np.uint32)
+    rq = randomize_query(q, page_addr=3, device_seed=seed)
+    mism_rand = ((rand_words[:, 0] ^ rq[:, 0]) & full[0]) | (
+        (rand_words[:, 1] ^ rq[:, 1]) & full[1])
+    bits_rand = (mism_rand == 0).astype(np.uint32)
+    bits_plain = match_slots(plain_words, q, full)
+    np.testing.assert_array_equal(bits_rand, bits_plain)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=16, max_size=16))
+def test_bitmap_roundtrip_property(words):
+    w = np.array(words, dtype=np.uint32)
+    assert np.array_equal(pack_bitmap(unpack_bitmap(w)), w)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**64 - 1))
+def test_mask_zero_matches_all_mask_full_matches_exact(key):
+    rng = np.random.default_rng(key % 2**32)
+    keys = rng.integers(0, 2**63, size=100, dtype=np.uint64)
+    built = build_page(keys, page_addr=0, randomize=False)
+    from repro.core.bits import bytes_to_slot_words
+    words = bytes_to_slot_words(built.plain)
+    zero = np.zeros(2, np.uint32)
+    assert match_slots(words, zero, zero).all()          # mask 0: all match
+    q = np.array(u64_to_pair(int(keys[0])), np.uint32)
+    full = np.array([0xFFFFFFFF] * 2, np.uint32)
+    exact = match_slots(words, q, full)
+    expect = np.zeros(512, np.uint32)
+    for i, k in enumerate(keys):
+        if k == keys[0]:
+            expect[8 + i] = 1
+    np.testing.assert_array_equal(exact[8:8 + 100], expect[8:8 + 100])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 2**32 - 1))
+def test_kernel_ref_agrees_with_core_match(n_pages, seed):
+    """The jnp oracle (kernel spec) == the numpy core match for random
+    pages and queries."""
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, 256, size=(n_pages, 4096)).astype(np.uint8)
+    lo, hi = pages_to_planes(pages)
+    q64 = rng.integers(0, 2**63, size=2, dtype=np.uint64)
+    m64 = rng.integers(0, 2**63, size=2, dtype=np.uint64)
+    out = np.asarray(sim_search_ref(lo, hi, u64_array_to_pairs(q64),
+                                    u64_array_to_pairs(m64)))
+    from repro.core.bits import bytes_to_slot_words
+    for p in range(n_pages):
+        words = bytes_to_slot_words(pages[p])
+        for qi in range(2):
+            expect = search_page(words, u64_array_to_pairs(q64)[qi],
+                                 u64_array_to_pairs(m64)[qi])
+            np.testing.assert_array_equal(out[qi, p], expect)

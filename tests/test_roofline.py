@@ -1,0 +1,122 @@
+"""HLO analyzer validation: trip counts, dot flops, collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_computations
+from repro.launch.roofline import Roofline, model_flops
+from repro.models.config import SHAPES
+from repro.configs import ARCHS
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_cost_analysis_undercounts_scan_bodies():
+    """The reason the analyzer exists: XLA counts a while body once."""
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, x, x)
+    raw = c.cost_analysis()
+    raw = raw[0] if isinstance(raw, list) else raw
+    expected = 10 * 2 * 128 ** 3
+    assert raw["flops"] == pytest.approx(expected / 10)   # body counted once
+    a = analyze_hlo(c.as_text())
+    assert a.dot_flops == pytest.approx(expected)          # trip-scaled
+    assert a.while_trips == [10]
+
+
+def test_analyzer_exact_on_fwd_bwd_scan():
+    def g(params, x):
+        def loss(p):
+            h = x
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            h, _ = jax.lax.scan(body, h, p)
+            return jnp.sum(h ** 2)
+        return jax.grad(loss)(params)
+    p = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    c = _compile(g, p, x)
+    a = analyze_hlo(c.as_text())
+    expected = 6 * 2 * 8 * 64 * 64 * 3      # fwd + 2 bwd matmuls per layer
+    assert a.dot_flops == pytest.approx(expected, rel=0.01)
+    assert sorted(a.while_trips) == [6, 6]
+
+
+def test_nested_scan_multipliers():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = _compile(f, x, x)
+    a = analyze_hlo(c.as_text())
+    assert a.dot_flops == pytest.approx(3 * 4 * 2 * 64 ** 3)
+
+
+def test_collective_parsing_smoke():
+    """Parser recognizes all-reduce lines in a hand-built HLO snippet."""
+    hlo = """
+ENTRY %main.1 (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %ar = f32[128,64]{1,0} all-reduce(%p0), replica_groups=[1,4]<=[4]
+  ROOT %out = f32[128,64]{1,0} add(%ar, %p0)
+}
+"""
+    a = analyze_hlo(hlo)
+    assert a.collective_bytes["all-reduce"] == 128 * 64 * 4
+    assert a.result_bytes > 0
+
+
+def test_roofline_terms_and_dominance():
+    rl = Roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                  coll={"all-reduce": int(50e9)}, n_devices=256)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(2.0)
+    assert rl.collective_s == pytest.approx(1.0)
+    assert rl.dominant == "memory"
+    assert rl.roofline_fraction(197e12 / 2) == pytest.approx(0.25)
+
+
+def test_model_flops_modes():
+    cfg = ARCHS["granite-3-8b"]
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert t == pytest.approx(6 * n * 256 * 4096)
+    assert p == pytest.approx(2 * n * 32 * 32768)
+    assert d == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_vs_total_flops():
+    kimi = ARCHS["kimi-k2-1t-a32b"]
+    assert kimi.active_param_count() < kimi.param_count() / 10
+
+
+def test_parse_computations_structure():
+    hlo = """
+%helper.1 (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  ROOT %r = f32[4]{0} add(%a, %a)
+}
+
+ENTRY %main.2 (x: f32[4]) -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  ROOT %c = f32[4]{0} call(%x), to_apply=%helper.1
+}
+"""
+    comps = parse_computations(hlo)
+    assert set(comps) == {"helper.1", "main.2"}
+    assert comps["main.2"].is_entry and not comps["helper.1"].is_entry

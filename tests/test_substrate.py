@@ -1,0 +1,191 @@
+"""Tests: page cache, SSD simulator, workload generator, deadline scheduler."""
+import numpy as np
+import pytest
+
+from repro.cache.pagecache import PageCache
+from repro.core.commands import Command
+from repro.core.scheduler import DeadlineScheduler
+from repro.flash.params import DEFAULT_PARAMS, FlashParams
+from repro.flash.ssd import SSDSim
+from repro.workload.runner import run
+from repro.workload.ycsb import concentration_table, generate, zipf_probs
+
+
+# ------------------------------------------------------------- page cache
+
+def test_cache_lru_eviction_order():
+    c = PageCache(2)
+    assert c.insert(1, dirty=False) == []
+    assert c.insert(2, dirty=False) == []
+    c.lookup(1)                                   # 1 becomes MRU
+    ev = c.insert(3, dirty=False)
+    assert ev == [(2, False)]
+
+
+def test_cache_write_absorption():
+    c = PageCache(4)
+    c.insert(1, dirty=True)
+    c.insert(1, dirty=True)
+    c.insert(1, dirty=True)
+    assert c.stats.absorbed_writes == 2
+    assert c.dirty_count == 1
+
+
+def test_cache_dirty_eviction_flagged():
+    c = PageCache(1)
+    c.insert(1, dirty=True)
+    ev = c.insert(2, dirty=False)
+    assert ev == [(1, True)]
+    assert c.stats.dirty_evictions == 1
+
+
+def test_cache_dirty_budget_forces_writeback():
+    c = PageCache(10, max_dirty_fraction=0.2)     # budget = 2 dirty pages
+    assert c.insert(1, dirty=True) == []
+    assert c.insert(2, dirty=True) == []
+    ev = c.insert(3, dirty=True)                  # over budget -> LRU dirty
+    assert ev == [(1, True)]
+    assert c.dirty_count == 2
+
+
+def test_cache_zero_capacity_noop():
+    c = PageCache(0)
+    assert not c.lookup(5)
+    assert c.insert(5, dirty=True) == []
+    assert len(c) == 0
+
+
+def test_cache_read_hit_keeps_dirty_bit():
+    c = PageCache(4)
+    c.insert(1, dirty=True)
+    assert c.lookup(1)
+    ev = c.insert(2, dirty=False)
+    c.insert(3, dirty=False), c.insert(4, dirty=False)
+    ev = c.insert(5, dirty=False)
+    assert ev == [(1, True)]          # still dirty when finally evicted
+
+
+# ---------------------------------------------------------------- SSD sim
+
+def _mini_params():
+    return FlashParams(channels=2, dies_per_channel=2, blocks_per_plane=4,
+                       pages_per_block=64)
+
+
+def test_sim_read_is_64x_less_pcie_than_baseline():
+    p = _mini_params()
+    b = SSDSim(p, n_index_pages=128, cache_pages=0, system="baseline")
+    s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
+    b.read(3, 67, 0.0)
+    s.read(3, 67, 0.0)
+    assert b.stats.pcie_bytes == 8192
+    assert s.stats.pcie_bytes == 128              # 64 B bitmap + 64 B chunk
+    assert b.stats.pcie_bytes / s.stats.pcie_bytes == 64
+
+
+def test_open_page_reuse_skips_sense():
+    p = _mini_params()
+    s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
+    s.read(3, 66, 0.0)              # dies 3 and 2 (4-die mini geometry)
+    senses = s.stats.senses
+    s.read(3, 66, 1e6)                            # same pages latched
+    assert s.stats.senses == senses               # no new sense
+    assert s.stats.open_page_hits >= 2
+
+
+def test_program_invalidates_open_page():
+    p = _mini_params()
+    s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
+    s.read(4, 69, 0.0)              # dies 0 and 1
+    senses = s.stats.senses
+    s._program(4, 1e6)                            # program on same die+page
+    s.read(4, 69, 2e6)
+    assert s.stats.senses > senses
+
+
+def test_write_no_cache_programs_immediately():
+    p = _mini_params()
+    s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
+    s.submit_write(5, 69, 0.0)
+    assert s.stats.programs == 2
+
+
+def test_baseline_read_priority_timelines_independent():
+    p = _mini_params()
+    s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
+    # saturate die 0 with programs, then read from it: sense not delayed
+    for i in range(4):
+        s._program(0, 0.0)
+    t = s._sense(0, 0.0)
+    assert t == p.t_read_ns                       # read-priority suspend
+
+
+def test_energy_accounting_positive_and_split():
+    p = _mini_params()
+    s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
+    s.read(3, 67, 0.0)
+    e = s.energy
+    assert e.sense_pj > 0 and e.bus_pj > 0 and e.match_pj > 0
+    assert e.program_pj == 0
+
+
+# ---------------------------------------------------------------- workload
+
+def test_zipf_probs_normalized_and_monotone():
+    pr = zipf_probs(1000, 0.9)
+    assert abs(pr.sum() - 1.0) < 1e-9
+    assert (np.diff(pr) <= 0).all()
+
+
+def test_concentration_table_shape():
+    t = concentration_table(10_000, 0.9)
+    assert t.shape == (4,) and t[0] > t[3]
+
+
+def test_generate_read_ratio_and_page_mapping():
+    wl = generate(20_000, n_key_pages=64, read_ratio=0.6, alpha=0.5, seed=3)
+    assert abs((wl.ops == 0).mean() - 0.6) < 0.02
+    assert wl.key_pages.max() < 64
+    assert (wl.value_pages >= 64).all() and (wl.value_pages < 128).all()
+    # key/value pages land on different dies for every die count we use
+    assert ((wl.key_pages % 16) != (wl.value_pages % 16)).all()
+
+
+def test_runner_produces_consistent_result():
+    wl = generate(2000, n_key_pages=128, read_ratio=0.5, alpha=0.5, seed=7)
+    r = run(wl, params=DEFAULT_PARAMS, system="sim", cache_coverage=0.25)
+    assert r.qps > 0
+    assert r.read_p99_ns >= r.read_median_ns >= 0
+    assert r.energy_pj > 0
+
+
+def test_runner_deterministic():
+    wl = generate(1500, n_key_pages=128, read_ratio=0.5, alpha=0.9, seed=9)
+    r1 = run(wl, params=DEFAULT_PARAMS, system="baseline", cache_coverage=0.1)
+    r2 = run(wl, params=DEFAULT_PARAMS, system="baseline", cache_coverage=0.1)
+    assert r1.qps == r2.qps and r1.energy_pj == r2.energy_pj
+
+
+# ------------------------------------------------------ deadline scheduler
+
+def test_deadline_scheduler_batches_same_page():
+    sch = DeadlineScheduler(deadline_ns=4000)
+    sch.submit(Command.search(7, 1), now_ns=0)
+    sch.submit(Command.search(7, 2), now_ns=1000)
+    sch.submit(Command.search(9, 3), now_ns=2000)
+    batches = list(sch.pop_expired(now_ns=4000))
+    assert len(batches) == 1 and len(batches[0]) == 2
+    assert all(c.page_addr == 7 for c in batches[0])
+    batches2 = list(sch.pop_expired(now_ns=7000))
+    assert len(batches2) == 1 and batches2[0][0].page_addr == 9
+
+
+def test_deadline_scheduler_drain_and_stats():
+    sch = DeadlineScheduler(deadline_ns=100)
+    for i in range(5):
+        sch.submit(Command.search(1, i), now_ns=0)
+    sch.submit(Command.search(2, 9), now_ns=0)
+    rest = list(sch.drain())
+    assert sch.stats.submitted == 6
+    assert sch.stats.max_batch == 5
+    assert len(sch) == 0
