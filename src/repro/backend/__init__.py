@@ -1,0 +1,12 @@
+"""Interchangeable execution backends for the SiM search/gather contract.
+
+See base.py for the contract, scalar.py for the per-page reference path and
+batched.py for the single-launch Pallas fast path.
+"""
+from .base import (BackendStats, MatchBackend, Ticket, as_backend,
+                   make_backend)
+from .batched import BatchedKernelBackend
+from .scalar import ScalarBackend
+
+__all__ = ["BackendStats", "MatchBackend", "Ticket", "as_backend",
+           "make_backend", "ScalarBackend", "BatchedKernelBackend"]

@@ -1,0 +1,133 @@
+"""MatchBackend: the batched search/gather contract, defined once.
+
+core/match.py specifies *what* a search and a gather compute; this module
+specifies *how* callers drive them at scale.  Index structures and workload
+runners never talk to a chip directly — they enqueue commands against a
+backend and flush, which is what turns a B+Tree range scan or a YCSB read
+burst into one device operation instead of a per-page command storm
+(paper §IV-E batch matching).
+
+Two interchangeable implementations ship today:
+
+  * ``ScalarBackend`` (scalar.py) — the numpy ``SimChip``/``SimChipArray``
+    functional model, executing queued commands one page at a time.  This is
+    the bit-exact reference, with the full latch/ECC machinery.
+  * ``BatchedKernelBackend`` (batched.py) — stages every queued search into
+    page-plane arrays and executes them in a single ``sim_search`` Pallas
+    launch (and queued gathers in a single ``sim_gather`` launch), with the
+    per-page randomization stream regenerated in-kernel.
+
+Future backends the ROADMAP names (sharded, async, multi-chip) implement
+the same three methods: ``submit_search``, ``submit_gather``, ``flush``.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+from repro.core.commands import (Command, GatherResponse, ReadFullResponse,
+                                 SearchResponse)
+from repro.core.engine import SimChipArray
+
+
+@dataclasses.dataclass
+class BackendStats:
+    searches: int = 0          # search commands resolved
+    gathers: int = 0           # gather commands resolved
+    flushes: int = 0           # non-empty flush() calls
+    kernel_launches: int = 0   # device launches (batched backend only)
+    staged_pages: int = 0      # page rows staged across launches
+    staged_queries: int = 0    # query rows staged across launches
+    batched_searches: int = 0  # searches that shared a launch with >= 1 peer
+
+
+class Ticket:
+    """Deferred response handle returned by ``submit_*``.
+
+    ``result()`` on an unresolved ticket flushes the owning backend first,
+    so eager callers never deadlock; batch-aware callers submit many
+    tickets and flush once.
+    """
+
+    __slots__ = ("_backend", "_value")
+
+    def __init__(self, backend: "MatchBackend"):
+        self._backend = backend
+        self._value = None
+
+    def _resolve(self, value) -> None:
+        self._value = value
+
+    @property
+    def done(self) -> bool:
+        return self._value is not None
+
+    def result(self):
+        if self._value is None:
+            self._backend.flush()
+        if self._value is None:
+            raise RuntimeError("flush() left a submitted ticket unresolved")
+        return self._value
+
+
+class MatchBackend(abc.ABC):
+    """Batched search/gather execution over a SimChipArray's stored pages."""
+
+    def __init__(self, chips: SimChipArray):
+        self.chips = chips
+        self.stats = BackendStats()
+
+    # ------------------------------------------------------------- storage
+    # Programming and full-page reads are storage-mode operations; both
+    # backends route them through the functional chip model so the stored
+    # (randomized) images — the ground truth searches run against — are
+    # identical regardless of backend choice.
+    def program_entries(self, page_addr: int, entries, **kw):
+        return self.chips.program_entries(page_addr, entries, **kw)
+
+    def read_full(self, page_addr: int) -> ReadFullResponse:
+        return self.chips.read_full(page_addr)
+
+    # ----------------------------------------------------------- immediate
+    def search(self, cmd: Command) -> SearchResponse:
+        return self.submit_search(cmd).result()
+
+    def gather(self, cmd: Command) -> GatherResponse:
+        return self.submit_gather(cmd).result()
+
+    # ------------------------------------------------------------ deferred
+    @abc.abstractmethod
+    def submit_search(self, cmd: Command) -> Ticket:
+        """Queue a search; the ticket resolves at the next flush()."""
+
+    @abc.abstractmethod
+    def submit_gather(self, cmd: Command) -> Ticket:
+        """Queue a gather; the ticket resolves at the next flush()."""
+
+    @abc.abstractmethod
+    def flush(self) -> None:
+        """Execute every queued command and resolve its ticket."""
+
+    @property
+    @abc.abstractmethod
+    def pending(self) -> int:
+        """Number of queued, unresolved commands."""
+
+
+def as_backend(chips_or_backend) -> MatchBackend:
+    """Adapt a raw SimChipArray to the reference backend (API compat)."""
+    if isinstance(chips_or_backend, MatchBackend):
+        return chips_or_backend
+    from .scalar import ScalarBackend
+    return ScalarBackend(chips_or_backend)
+
+
+def make_backend(name: str, chips: SimChipArray, **kw) -> MatchBackend:
+    """Factory: ``scalar`` (reference) or ``batched`` (Pallas fast path)."""
+    from .batched import BatchedKernelBackend
+    from .scalar import ScalarBackend
+    backends = {"scalar": ScalarBackend, "batched": BatchedKernelBackend}
+    if name not in backends:
+        raise ValueError(f"unknown backend {name!r}; pick from "
+                         f"{sorted(backends)}")
+    return backends[name](chips, **kw)

@@ -1,0 +1,195 @@
+"""Batched MatchBackend: queued commands execute as one Pallas launch.
+
+The deferred submission queue is staged into dense device operands at
+flush time:
+
+  * every *unique* page touched by a queued search becomes one row of the
+    (N, 512) lo/hi word planes, carrying its chip-local flash address and
+    per-chip device seed so the kernel regenerates the §IV-C1 randomization
+    stream in-VMEM (stored images are staged as-is, bit errors included);
+  * every *unique* (query, mask) pair becomes one row of the (Q, 2) query
+    operands — Q queries match against N pages in a single ``sim_search``
+    launch, the §IV-E cross-page multi-query batch that amortizes one
+    staging pass over the whole burst;
+  * queued gathers stage per-command (page chunk words, chunk bitmap) rows
+    and compact through one ``sim_gather`` launch; de-randomization and
+    inner-code verification of the selected chunks happen host-side, as on
+    the controller.
+
+Results are bit-identical to ``ScalarBackend`` for every programmed page
+(damaged or not): both paths match against the same stored image with the
+same stream.  What this backend does *not* model is the per-page-open
+control machinery — optimistic-open verdicts, ECC fallback repair, latch
+pipelining — so ``SearchResponse.open_verdict`` always reads CLEAN here.
+Workloads that need open verdicts (error-injection studies) use the scalar
+backend; see tests/test_backend_parity.py for the exact contract.
+
+Query rows are padded to the next power of two and page rows to a multiple
+of ``page_block``, so repeated flushes of similar-size bursts reuse the
+same compiled kernel instead of retracing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ecc
+from repro.core.bits import CHUNK_BYTES, CHUNKS_PER_PAGE, popcount_words, \
+    slot_words_to_bytes, unpack_bitmap
+from repro.core.commands import Command, GatherResponse, Op, SearchResponse
+from repro.core.ecc import OpenVerdict
+from repro.core.engine import SimChip, SimChipArray
+from repro.core.randomize import chunk_stream_words
+from repro.kernels.layout import pages_to_chunk_words, pages_to_planes
+from repro.kernels.sim_gather.ops import sim_gather
+from repro.kernels.sim_search.ops import sim_search
+
+from .base import MatchBackend, Ticket
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+class BatchedKernelBackend(MatchBackend):
+    def __init__(self, chips: SimChipArray, *, page_block: int = 32,
+                 use_kernel: bool = True, interpret: bool | None = None):
+        super().__init__(chips)
+        self.page_block = page_block
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self._searches: list[tuple[Command, Ticket]] = []
+        self._gathers: list[tuple[Command, Ticket]] = []
+
+    # ------------------------------------------------------------ deferred
+    def submit_search(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.SEARCH or cmd.query is None or cmd.mask is None:
+            raise ValueError(f"not a search command: {cmd}")
+        t = Ticket(self)
+        self._searches.append((cmd, t))
+        return t
+
+    def submit_gather(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.GATHER or cmd.chunk_bitmap is None:
+            raise ValueError(f"not a gather command: {cmd}")
+        t = Ticket(self)
+        self._gathers.append((cmd, t))
+        return t
+
+    @property
+    def pending(self) -> int:
+        return len(self._searches) + len(self._gathers)
+
+    def flush(self) -> None:
+        if not self._searches and not self._gathers:
+            return
+        self.stats.flushes += 1
+        searches, self._searches = self._searches, []
+        gathers, self._gathers = self._gathers, []
+        if searches:
+            self._flush_searches(searches)
+        if gathers:
+            self._flush_gathers(gathers)
+
+    # ------------------------------------------------------------- staging
+    def _stored(self, page_addr: int) -> tuple[SimChip, int]:
+        chip, local = self.chips.route(page_addr)
+        chip._get(local)                       # KeyError on unprogrammed
+        return chip, local
+
+    def _flush_searches(self, searches) -> None:
+        # Stage unique pages and unique (query, mask) operand pairs.
+        page_rows: dict[int, int] = {}
+        query_rows: dict[tuple, int] = {}
+        raws, page_ids, page_seeds, chip_rows = [], [], [], []
+        q_pairs, m_pairs = [], []
+        placements = []                        # (qi, pi) per command
+        for cmd, _ in searches:
+            if cmd.page_addr not in page_rows:
+                chip, local = self._stored(cmd.page_addr)
+                page_rows[cmd.page_addr] = len(raws)
+                raws.append(chip.pages[local].raw)
+                page_ids.append(local)
+                page_seeds.append(chip.device_seed & 0xFFFFFFFF)
+                chip_rows.append(chip)
+            key = (cmd.query, cmd.mask)
+            if key not in query_rows:
+                query_rows[key] = len(q_pairs)
+                q_pairs.append(cmd.query)
+                m_pairs.append(cmd.mask)
+            placements.append((query_rows[key], page_rows[cmd.page_addr]))
+
+        # One staged sense per unique page, amortized over all queries.
+        for chip in chip_rows:
+            chip.counters.array_reads += 1
+
+        lo, hi = pages_to_planes(np.stack(raws))
+        n_queries = len(q_pairs)
+        q = np.zeros((_next_pow2(n_queries), 2), dtype=np.uint32)
+        m = np.zeros_like(q)
+        q[:n_queries] = np.asarray(q_pairs, dtype=np.uint32)
+        m[:n_queries] = np.asarray(m_pairs, dtype=np.uint32)
+
+        out = np.asarray(sim_search(
+            lo, hi, q, m, randomized=True,
+            page_ids=np.asarray(page_ids, dtype=np.uint32),
+            page_seeds=np.asarray(page_seeds, dtype=np.uint32),
+            page_block=self.page_block, use_kernel=self.use_kernel,
+            interpret=self.interpret))        # (Qpad, N, 16)
+
+        self.stats.kernel_launches += 1
+        self.stats.staged_pages += len(raws)
+        self.stats.staged_queries += n_queries
+        self.stats.searches += len(searches)
+        if len(searches) > 1:
+            self.stats.batched_searches += len(searches)
+
+        for (cmd, ticket), (qi, pi) in zip(searches, placements):
+            bitmap = out[qi, pi].copy()
+            chip, _ = self.chips.route(cmd.page_addr)
+            chip.counters.searches += 1
+            ticket._resolve(SearchResponse(
+                bitmap_words=bitmap,
+                match_count=int(popcount_words(bitmap).sum()),
+                open_verdict=OpenVerdict.CLEAN.value))
+
+    def _flush_gathers(self, gathers) -> None:
+        rows, bitmaps, owners = [], [], []
+        for cmd, _ in gathers:
+            chip, local = self._stored(cmd.page_addr)
+            rows.append(chip.pages[local].raw)
+            bitmaps.append(cmd.chunk_bitmap)
+            owners.append((chip, local))
+        chunk_words = pages_to_chunk_words(np.stack(rows))
+        bm = np.asarray(bitmaps, dtype=np.uint32)
+        out, _counts = sim_gather(chunk_words, bm,
+                                  max_out=CHUNKS_PER_PAGE,
+                                  interpret=self.interpret,
+                                  use_kernel=self.use_kernel)
+        out = np.asarray(out)                  # (R, 64, 16) uint32
+        self.stats.kernel_launches += 1
+        self.stats.gathers += len(gathers)
+
+        for r, (cmd, ticket) in enumerate(gathers):
+            chip, local = owners[r]
+            sp = chip.pages[local]
+            bits = unpack_bitmap(bm[r], n_bits=CHUNKS_PER_PAGE)
+            chunk_ids = np.nonzero(bits)[0]
+            k = int(chunk_ids.size)
+            if k:
+                # Controller side: de-randomize the compacted chunks with
+                # their chunk-addressed streams, then verify inner codes.
+                words = out[r, :k].reshape(k, 8, 2)
+                streams = np.stack([
+                    chunk_stream_words(local, int(c), chip.device_seed)
+                    for c in chunk_ids])
+                plain = slot_words_to_bytes(words ^ streams)
+                parity_ok = (ecc.crc32_rows(plain)
+                             == sp.chunk_parities[chunk_ids])
+            else:
+                plain = np.zeros((0, CHUNK_BYTES), dtype=np.uint8)
+                parity_ok = np.zeros(0, dtype=bool)
+            chip.counters.array_reads += 1
+            chip.counters.gathers += 1
+            chip.counters.chunks_gathered += k
+            ticket._resolve(GatherResponse(chunks=plain, chunk_ids=chunk_ids,
+                                           parity_ok=parity_ok))

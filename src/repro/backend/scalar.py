@@ -1,0 +1,47 @@
+"""Reference MatchBackend: queued commands execute one page at a time.
+
+This is the existing numpy ``SimChip`` path behind the deferred-submission
+interface.  Every queued command walks the full functional model — latch
+pipeline, optimistic-open verdicts, ECC fallback — so it remains the
+bit-exact oracle the batched backend is validated against, and the only
+backend that models damaged pages end to end.
+"""
+from __future__ import annotations
+
+from repro.core.commands import Command
+from repro.core.engine import SimChipArray
+
+from .base import MatchBackend, Ticket
+
+
+class ScalarBackend(MatchBackend):
+    def __init__(self, chips: SimChipArray):
+        super().__init__(chips)
+        self._queue: list[tuple[str, Command, Ticket]] = []
+
+    def submit_search(self, cmd: Command) -> Ticket:
+        t = Ticket(self)
+        self._queue.append(("search", cmd, t))
+        return t
+
+    def submit_gather(self, cmd: Command) -> Ticket:
+        t = Ticket(self)
+        self._queue.append(("gather", cmd, t))
+        return t
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> None:
+        queue, self._queue = self._queue, []
+        if not queue:
+            return
+        self.stats.flushes += 1
+        for kind, cmd, ticket in queue:
+            if kind == "search":
+                ticket._resolve(self.chips.search(cmd))
+                self.stats.searches += 1
+            else:
+                ticket._resolve(self.chips.gather(cmd))
+                self.stats.gathers += 1

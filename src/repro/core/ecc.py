@@ -84,14 +84,19 @@ def crc64(data: np.ndarray | bytes) -> int:
     return int(crc ^ np.uint64(0xFFFFFFFFFFFFFFFF))
 
 
+def crc32_rows(rows: np.ndarray) -> np.ndarray:
+    """Row-wise CRC-32 over a (k, n) uint8 array -> (k,) uint32."""
+    rows = np.asarray(rows, dtype=np.uint8)
+    crc = np.full(rows.shape[0], 0xFFFFFFFF, dtype=np.uint32)
+    for i in range(rows.shape[1]):
+        crc = _CRC32_TABLE[(crc ^ rows[:, i]) & 0xFF] ^ (crc >> np.uint32(8))
+    return crc ^ np.uint32(0xFFFFFFFF)
+
+
 def crc32_chunks(page_bytes: np.ndarray) -> np.ndarray:
     """CRC-32 of each 64 B chunk of a page -> (64,) uint32 (vectorized)."""
-    chunks = np.asarray(page_bytes, dtype=np.uint8).reshape(
-        CHUNKS_PER_PAGE, CHUNK_BYTES)
-    crc = np.full(CHUNKS_PER_PAGE, 0xFFFFFFFF, dtype=np.uint32)
-    for i in range(CHUNK_BYTES):
-        crc = _CRC32_TABLE[(crc ^ chunks[:, i]) & 0xFF] ^ (crc >> np.uint32(8))
-    return crc ^ np.uint32(0xFFFFFFFF)
+    return crc32_rows(np.asarray(page_bytes, dtype=np.uint8).reshape(
+        CHUNKS_PER_PAGE, CHUNK_BYTES))
 
 
 # --------------------------------------------------------------------------

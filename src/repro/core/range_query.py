@@ -18,8 +18,14 @@ shifting the decomposition into the field's bit range.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
+
+from .commands import Command
+
+if TYPE_CHECKING:                                    # avoid core -> backend cycle
+    from repro.backend.base import MatchBackend
 
 U64 = 0xFFFFFFFFFFFFFFFF
 
@@ -59,6 +65,33 @@ class RangePlan:
         for q in self.exclude:
             inc &= ~q.matches(keys)
         return inc
+
+
+def evaluate_plan_on_pages(backend: "MatchBackend", plan: RangePlan,
+                           page_addrs: Sequence[int]) -> np.ndarray:
+    """Run a RangePlan over many pages through a MatchBackend.
+
+    Every (page x pass) search command is submitted up front and the
+    backend flushed once, so the whole plan executes as a single batched
+    launch on the kernel backend (§IV-E) instead of n_passes * n_pages
+    per-page commands.  Returns the combined (len(page_addrs), 16) uint32
+    slot bitmaps: OR over include passes, AND-NOT over exclude passes
+    (paper Fig 10).
+    """
+    include = [[backend.submit_search(Command.search(p, mq.query, mq.mask))
+                for mq in plan.include] for p in page_addrs]
+    exclude = [[backend.submit_search(Command.search(p, mq.query, mq.mask))
+                for mq in plan.exclude] for p in page_addrs]
+    backend.flush()
+    out = np.zeros((len(page_addrs), 16), dtype=np.uint32)
+    for i in range(len(page_addrs)):
+        acc = np.zeros(16, dtype=np.uint32)
+        for t in include[i]:
+            acc |= t.result().bitmap_words
+        for t in exclude[i]:
+            acc &= ~t.result().bitmap_words
+        out[i] = acc
+    return out
 
 
 def _field_mask(shift: int, width: int) -> int:

@@ -6,6 +6,11 @@ searched with `search` and fetched with `gather`.  A lookup therefore ships
 one 8-byte query down and gets 64 B of bitmap + 64 B of chunk back instead
 of two 4 KiB pages.
 
+All device traffic flows through a MatchBackend: point lookups issue
+immediate commands, while ``lookup_batch`` and ``range_query`` enqueue
+every search (and then every gather) before flushing, so a whole scan or
+burst executes as one batched launch on the kernel backend (§IV-E).
+
 The host-side B+Tree logic is deliberately ordinary; everything interesting
 happens in how little data crosses the bus.
 """
@@ -16,12 +21,12 @@ import dataclasses
 
 import numpy as np
 
+from repro.backend import MatchBackend, as_backend
 from repro.core.bits import (SLOTS_PER_CHUNK, chunk_bitmap_from_slot_bitmap,
                              pair_to_u64, unpack_bitmap)
 from repro.core.commands import Command
-from repro.core.engine import SimChipArray
 from repro.core.page import mask_header_slots
-from repro.core.range_query import exact_range
+from repro.core.range_query import evaluate_plan_on_pages, exact_range
 
 FULL_MASK = 0xFFFFFFFFFFFFFFFF
 LEAF_CAPACITY = 504
@@ -44,15 +49,23 @@ class LookupStats:
 
 
 class SimBTree:
-    """Bulk-loaded B+Tree over (uint64 key -> uint64 value)."""
+    """Bulk-loaded B+Tree over (uint64 key -> uint64 value).
 
-    def __init__(self, chips: SimChipArray, *, leaf_fill: int = 404):
-        self.chips = chips
+    ``backend`` accepts either a MatchBackend or a raw SimChipArray (which
+    is adapted to the scalar reference backend).
+    """
+
+    def __init__(self, backend, *, leaf_fill: int = 404):
+        self.backend: MatchBackend = as_backend(backend)
         self.leaf_fill = min(leaf_fill, LEAF_CAPACITY)
         self.leaves: list[Leaf] = []
         self._separators: list[int] = []     # low key of each leaf
         self._next_page = 0
         self.stats = LookupStats()
+
+    @property
+    def chips(self):
+        return self.backend.chips
 
     # ------------------------------------------------------------- loading
     def bulk_load(self, keys: np.ndarray, values: np.ndarray,
@@ -68,8 +81,8 @@ class SimBTree:
             v = values[start:start + self.leaf_fill]
             kp, vp = self._next_page, self._next_page + 1
             self._next_page += 2
-            self.chips.program_entries(kp, k, timestamp_ns=timestamp_ns)
-            self.chips.program_entries(vp, v, timestamp_ns=timestamp_ns)
+            self.backend.program_entries(kp, k, timestamp_ns=timestamp_ns)
+            self.backend.program_entries(vp, v, timestamp_ns=timestamp_ns)
             self.leaves.append(Leaf(kp, vp, len(k), int(k[0])))
             self._separators.append(int(k[0]))
 
@@ -78,63 +91,107 @@ class SimBTree:
         i = bisect.bisect_right(self._separators, int(key)) - 1
         return self.leaves[i] if i >= 0 else None
 
+    def _value_slot(self, bitmap_words) -> int | None:
+        """First matching user slot of a key-page bitmap, or None.
+
+        Key and value pages share the same entry layout, so the value sits
+        at the *same* slot index on the value page.
+        """
+        bitmap = mask_header_slots(bitmap_words)
+        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+        return int(slots[0]) if slots.size else None
+
+    @staticmethod
+    def _extract_value(gather_resp, value_slot: int) -> int:
+        off = (value_slot % SLOTS_PER_CHUNK) * 8
+        return int.from_bytes(bytes(gather_resp.chunks[0][off:off + 8]),
+                              "little")
+
     def lookup(self, key: int) -> int | None:
         """Point query: search command on the key page, gather on the value
         page (pipelined on-chip; we issue them back to back)."""
-        leaf = self._leaf_for(key)
-        if leaf is None:
-            return None
-        resp = self.chips.search(Command.search(leaf.key_page, int(key),
-                                                FULL_MASK))
-        self.stats.searches += 1
-        self.stats.bitmap_bytes += 64
-        bitmap = mask_header_slots(resp.bitmap_words)
-        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
-        if slots.size == 0:
-            return None
-        # value sits at the same entry index in the value page
-        entry = int(slots[0]) - SLOTS_PER_CHUNK
-        value_slot = SLOTS_PER_CHUNK + entry
-        cb = 1 << (value_slot // SLOTS_PER_CHUNK)
-        g = self.chips.gather(Command.gather(leaf.value_page, cb))
-        self.stats.gathers += 1
-        self.stats.chunk_bytes += 64 * len(g.chunk_ids)
-        off = (value_slot % SLOTS_PER_CHUNK) * 8
-        return int.from_bytes(bytes(g.chunks[0][off:off + 8]), "little")
+        return self.lookup_batch([key])[0]
+
+    def lookup_batch(self, keys) -> list[int | None]:
+        """Batched point queries: all searches in one flush, then all
+        gathers in one flush — two launches for the whole burst."""
+        leaves = [self._leaf_for(int(k)) for k in keys]
+        tickets = []
+        for k, leaf in zip(keys, leaves):
+            if leaf is None:
+                tickets.append(None)
+                continue
+            tickets.append(self.backend.submit_search(
+                Command.search(leaf.key_page, int(k), FULL_MASK)))
+            self.stats.searches += 1
+            self.stats.bitmap_bytes += 64
+        self.backend.flush()
+
+        value_slots: list[int | None] = []
+        gathers = []
+        for leaf, t in zip(leaves, tickets):
+            slot = self._value_slot(t.result().bitmap_words) \
+                if t is not None else None
+            value_slots.append(slot)
+            if slot is None:
+                gathers.append(None)
+                continue
+            cb = 1 << (slot // SLOTS_PER_CHUNK)
+            gathers.append(self.backend.submit_gather(
+                Command.gather(leaf.value_page, cb)))
+            self.stats.gathers += 1
+        self.backend.flush()
+
+        out: list[int | None] = []
+        for slot, g in zip(value_slots, gathers):
+            if g is None:
+                out.append(None)
+                continue
+            resp = g.result()
+            self.stats.chunk_bytes += 64 * len(resp.chunk_ids)
+            out.append(self._extract_value(resp, slot))
+        return out
 
     # --------------------------------------------------------------- range
     def range_query(self, lo: int, hi: int) -> list[tuple[int, int]]:
-        """lo <= key < hi via the §V-C masked-equality decomposition,
-        evaluated leaf by leaf with bitmap OR accumulation."""
+        """lo <= key < hi via the §V-C masked-equality decomposition: all
+        (leaf x pass) searches flush as one batch, then all key/value-page
+        gathers flush as a second batch."""
         plan = exact_range(int(lo), int(hi), width=64)
-        out: list[tuple[int, int]] = []
         i0 = max(bisect.bisect_right(self._separators, int(lo)) - 1, 0)
-        for leaf in self.leaves[i0:]:
-            if leaf.low_key >= hi:
-                break
-            acc = np.zeros(16, dtype=np.uint32)
-            for mq in plan.include:
-                resp = self.chips.search(
-                    Command.search(leaf.key_page, mq.query, mq.mask))
-                self.stats.searches += 1
-                self.stats.bitmap_bytes += 64
-                acc |= resp.bitmap_words
+        leaves = [leaf for leaf in self.leaves[i0:] if leaf.low_key < hi]
+        if not leaves:
+            return []
+        bitmaps = evaluate_plan_on_pages(
+            self.backend, plan, [leaf.key_page for leaf in leaves])
+        self.stats.searches += plan.n_passes * len(leaves)
+        self.stats.bitmap_bytes += 64 * plan.n_passes * len(leaves)
+
+        hits = []                      # (leaf, slots, key ticket, val ticket)
+        for leaf, acc in zip(leaves, bitmaps):
             acc = mask_header_slots(acc)
             slots = np.nonzero(unpack_bitmap(acc, 512))[0]
             if slots.size == 0:
                 continue
             # gather matched key chunks + the aligned value chunks
             kb = int(pair_to_u64(*chunk_bitmap_from_slot_bitmap(acc)))
-            gk = self.chips.gather(Command.gather(leaf.key_page, kb))
-            gv = self.chips.gather(Command.gather(leaf.value_page, kb))
+            gk = self.backend.submit_gather(Command.gather(leaf.key_page, kb))
+            gv = self.backend.submit_gather(Command.gather(leaf.value_page,
+                                                           kb))
             self.stats.gathers += 2
-            self.stats.chunk_bytes += 64 * (len(gk.chunk_ids)
-                                            + len(gv.chunk_ids))
-            chunk_pos = {int(c): j for j, c in enumerate(gk.chunk_ids)}
+            hits.append((leaf, slots, gk, gv))
+        self.backend.flush()
+
+        out: list[tuple[int, int]] = []
+        for leaf, slots, gk, gv in hits:
+            rk, rv = gk.result(), gv.result()
+            self.stats.chunk_bytes += 64 * (len(rk.chunk_ids)
+                                            + len(rv.chunk_ids))
+            chunk_pos = {int(c): j for j, c in enumerate(rk.chunk_ids)}
             for s in slots:
                 c, off = s // SLOTS_PER_CHUNK, (s % SLOTS_PER_CHUNK) * 8
                 j = chunk_pos[int(c)]
-                k = int.from_bytes(bytes(gk.chunks[j][off:off + 8]), "little")
-                v = int.from_bytes(bytes(gv.chunks[j][off:off + 8]), "little")
+                k = int.from_bytes(bytes(rk.chunks[j][off:off + 8]), "little")
+                v = int.from_bytes(bytes(rv.chunks[j][off:off + 8]), "little")
                 out.append((k, v))
         return out

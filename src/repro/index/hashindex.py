@@ -5,6 +5,10 @@ packed (key -> value) entries as two SiM pages.  Bucket splits use the §V-D
 keyspace-partitioning trick: one masked *search* per half isolates the
 entries whose next hash bit is 0/1, and *gather* moves only those chunks —
 no full-page read during redistribution.
+
+Device traffic flows through a MatchBackend; ``lookup_batch`` enqueues a
+burst of probes and flushes once (one kernel launch per phase on the
+batched backend).
 """
 from __future__ import annotations
 
@@ -12,11 +16,11 @@ import dataclasses
 
 import numpy as np
 
+from repro.backend import MatchBackend, as_backend
 from repro.core.bits import (SLOTS_PER_CHUNK, chunk_bitmap_from_slot_bitmap,
                              pair_to_u64, unpack_bitmap)
 from repro.core.commands import Command
-from repro.core.engine import SimChipArray
-from repro.core.page import entries_from_plain, mask_header_slots
+from repro.core.page import mask_header_slots
 
 FULL_MASK = 0xFFFFFFFFFFFFFFFF
 BUCKET_CAPACITY = 404
@@ -40,8 +44,8 @@ class Bucket:
 
 
 class SimHashIndex:
-    def __init__(self, chips: SimChipArray, *, global_depth: int = 2):
-        self.chips = chips
+    def __init__(self, backend, *, global_depth: int = 2):
+        self.backend: MatchBackend = as_backend(backend)
         self.global_depth = global_depth
         self._next_page = 0
         self.buckets: list[Bucket] = []
@@ -52,14 +56,18 @@ class SimHashIndex:
         self.split_searches = 0
         self.split_gathered_chunks = 0
 
+    @property
+    def chips(self):
+        return self.backend.chips
+
     def _new_bucket(self, depth: int) -> int:
         kp, vp = self._next_page, self._next_page + 1
         self._next_page += 2
         self.buckets.append(Bucket(kp, vp, depth,
                                    np.zeros(0, dtype=np.uint64),
                                    np.zeros(0, dtype=np.uint64)))
-        self.chips.program_entries(kp, np.zeros(0, dtype=np.uint64))
-        self.chips.program_entries(vp, np.zeros(0, dtype=np.uint64))
+        self.backend.program_entries(kp, np.zeros(0, dtype=np.uint64))
+        self.backend.program_entries(vp, np.zeros(0, dtype=np.uint64))
         return len(self.buckets) - 1
 
     def _dir_slot(self, key: int) -> int:
@@ -79,8 +87,8 @@ class SimHashIndex:
         else:
             b.keys = np.append(b.keys, np.uint64(key))
             b.values = np.append(b.values, np.uint64(value))
-        self.chips.program_entries(b.key_page, b.keys)
-        self.chips.program_entries(b.value_page, b.values)
+        self.backend.program_entries(b.key_page, b.keys)
+        self.backend.program_entries(b.value_page, b.values)
 
     def _split(self, bi: int) -> None:
         """§V-D redistribution: partition the bucket by the next hash bit
@@ -96,11 +104,11 @@ class SimHashIndex:
         # Demonstrate the command sequence on-device: search key page with a
         # mask selecting nothing of the key (mask=0 matches all), then use
         # host-computed partition bitmaps to gather each side's chunks.
-        resp = self.chips.search(Command.search(b.key_page, 0, 0))
+        resp = self.backend.search(Command.search(b.key_page, 0, 0))
         self.split_searches += 1
         bitmap = mask_header_slots(resp.bitmap_words)
         cb = int(pair_to_u64(*chunk_bitmap_from_slot_bitmap(bitmap)))
-        g = self.chips.gather(Command.gather(b.key_page, cb))
+        g = self.backend.gather(Command.gather(b.key_page, cb))
         self.split_gathered_chunks += len(g.chunk_ids)
 
         if b.local_depth == self.global_depth:
@@ -113,26 +121,49 @@ class SimHashIndex:
         nb.keys, nb.values = b.keys[side1], b.values[side1]
         b.keys, b.values = b.keys[~side1], b.values[~side1]
         b.local_depth += 1
-        mask_bits = b.local_depth
         for d in range(len(self.directory)):
             if self.directory[d] == bi and ((d >> bit) & 1):
                 self.directory[d] = new_bi
         for bb in (b, nb):
-            self.chips.program_entries(bb.key_page, bb.keys)
-            self.chips.program_entries(bb.value_page, bb.values)
+            self.backend.program_entries(bb.key_page, bb.keys)
+            self.backend.program_entries(bb.value_page, bb.values)
 
     # -------------------------------------------------------------- lookup
     def lookup(self, key: int) -> int | None:
-        b = self.buckets[self.directory[self._dir_slot(key)]]
-        resp = self.chips.search(Command.search(b.key_page, int(key),
-                                                FULL_MASK))
-        bitmap = mask_header_slots(resp.bitmap_words)
-        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
-        if slots.size == 0:
-            return None
-        entry = int(slots[0]) - SLOTS_PER_CHUNK
-        value_slot = SLOTS_PER_CHUNK + entry
-        g = self.chips.gather(Command.gather(
-            b.value_page, 1 << (value_slot // SLOTS_PER_CHUNK)))
-        off = (value_slot % SLOTS_PER_CHUNK) * 8
-        return int.from_bytes(bytes(g.chunks[0][off:off + 8]), "little")
+        return self.lookup_batch([key])[0]
+
+    def lookup_batch(self, keys) -> list[int | None]:
+        """Batched probes: all bucket searches flush as one launch, then
+        all value-page gathers as a second."""
+        buckets = [self.buckets[self.directory[self._dir_slot(int(k))]]
+                   for k in keys]
+        tickets = [self.backend.submit_search(
+            Command.search(b.key_page, int(k), FULL_MASK))
+            for k, b in zip(keys, buckets)]
+        self.backend.flush()
+
+        slots_out: list[int | None] = []
+        gathers = []
+        for b, t in zip(buckets, tickets):
+            bitmap = mask_header_slots(t.result().bitmap_words)
+            slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+            if slots.size == 0:
+                slots_out.append(None)
+                gathers.append(None)
+                continue
+            entry = int(slots[0]) - SLOTS_PER_CHUNK
+            value_slot = SLOTS_PER_CHUNK + entry
+            slots_out.append(value_slot)
+            gathers.append(self.backend.submit_gather(Command.gather(
+                b.value_page, 1 << (value_slot // SLOTS_PER_CHUNK))))
+        self.backend.flush()
+
+        out: list[int | None] = []
+        for value_slot, g in zip(slots_out, gathers):
+            if g is None:
+                out.append(None)
+                continue
+            off = (value_slot % SLOTS_PER_CHUNK) * 8
+            out.append(int.from_bytes(
+                bytes(g.result().chunks[0][off:off + 8]), "little"))
+        return out

@@ -10,35 +10,46 @@ from .ref import sim_search_ref
 from .sim_search import sim_search_kernel
 
 
-def _pad_pages(lo, hi, page_block):
+def _pad_pages(lo, hi, page_block, page_ids=None, page_seeds=None):
     n = lo.shape[0]
     pad = (-n) % page_block
     if pad:
         lo = jnp.pad(lo, ((0, pad), (0, 0)))
         hi = jnp.pad(hi, ((0, pad), (0, 0)))
-    return lo, hi, n
+        if page_ids is not None:
+            page_ids = jnp.pad(jnp.asarray(page_ids, jnp.uint32), (0, pad))
+        if page_seeds is not None:
+            page_seeds = jnp.pad(jnp.asarray(page_seeds, jnp.uint32),
+                                 (0, pad))
+    return lo, hi, page_ids, page_seeds, n
 
 
 def sim_search(lo, hi, queries, masks, *, page_base: int = 0,
                page_block: int = 32, randomized: bool = False,
                device_seed: int = 0, interpret: bool | None = None,
-               use_kernel: bool = True):
+               use_kernel: bool = True, page_ids=None, page_seeds=None):
     """Masked multi-query search over page planes -> (Q, N, 16) bitmaps.
 
     ``use_kernel=False`` routes through the jnp oracle (the path the XLA
     dry-run models lower; identical semantics, validated in tests).
+    ``page_ids``/``page_seeds`` give each staged page its own flash address
+    and device seed for the randomized-stream regeneration, so one launch
+    can batch pages from different chips (the MatchBackend fast path).
     """
     queries = jnp.atleast_2d(jnp.asarray(queries, jnp.uint32))
     masks = jnp.atleast_2d(jnp.asarray(masks, jnp.uint32))
     if not use_kernel:
         return sim_search_ref(lo, hi, queries, masks, randomized=randomized,
-                              page_base=page_base, device_seed=device_seed)
+                              page_base=page_base, device_seed=device_seed,
+                              page_ids=page_ids, page_seeds=page_seeds)
     interpret = default_interpret() if interpret is None else interpret
-    lo, hi, n = _pad_pages(jnp.asarray(lo, jnp.uint32),
-                           jnp.asarray(hi, jnp.uint32), page_block)
+    lo, hi, page_ids, page_seeds, n = _pad_pages(
+        jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32), page_block,
+        page_ids, page_seeds)
     out = sim_search_kernel(lo, hi, queries, masks, page_base,
                             page_block=page_block, randomized=randomized,
-                            device_seed=device_seed, interpret=interpret)
+                            device_seed=device_seed, interpret=interpret,
+                            page_ids=page_ids, page_seeds=page_seeds)
     return out[:, :n]
 
 

@@ -15,6 +15,14 @@ Hardware mapping (DESIGN.md §2):
     VMEM, so HBM write traffic is 64 B/page — the same 64:1 reduction the
     chip achieves on its bus.
 
+Page addressing: each staged page carries its own 32-bit flash address and
+device seed as (N, 1) uint32 operands riding the sublane axis next to the
+planes.  The stream counter for slot ``s`` of page ``p`` is
+``(addr[p] * 512 + s) ^ seed[p]`` — identical to core/randomize.py — so a
+single launch can batch pages from *different* chips (different local
+addresses and device seeds), which is what the MatchBackend's deferred
+submission queue relies on (§IV-E cross-page multi-query batching).
+
 Block geometry: the trailing axis of both planes is 512 = 4 x 128 lanes;
 ``page_block`` rides the sublane axis (multiples of 8 keep the uint32 tile
 (8, 128)-aligned).  VMEM per step ~= 2 * PB * 2 KiB + Q * PB * 2 KiB
@@ -36,9 +44,8 @@ SLOTS = 512
 BITMAP_WORDS = 16
 
 
-def _search_kernel(lo_ref, hi_ref, q_ref, m_ref, base_ref, out_ref, *,
-                   page_block: int, n_queries: int, randomized: bool,
-                   device_seed: int):
+def _search_kernel(lo_ref, hi_ref, q_ref, m_ref, page_ref, seed_ref, out_ref,
+                   *, page_block: int, n_queries: int, randomized: bool):
     lo = lo_ref[...]                       # (PB, 512) uint32
     hi = hi_ref[...]
     q = q_ref[...]                         # (Q, 2) uint32
@@ -49,14 +56,13 @@ def _search_kernel(lo_ref, hi_ref, q_ref, m_ref, base_ref, out_ref, *,
     m_hi = m[:, 1][:, None, None]
 
     if randomized:
-        # Deserializer: regenerate the slot-address-counter stream in VMEM.
-        tile = pl.program_id(0).astype(jnp.uint32)
-        page_in_tile = jax.lax.broadcasted_iota(
-            jnp.uint32, (page_block, SLOTS), 0)
-        slot = jax.lax.broadcasted_iota(jnp.uint32, (page_block, SLOTS), 1)
-        page = base_ref[0, 0] + tile * jnp.uint32(page_block) + page_in_tile
-        ctr = (page * jnp.uint32(SLOTS) + slot) ^ jnp.uint32(
-            device_seed & 0xFFFFFFFF)
+        # Deserializer: regenerate the slot-address-counter stream in VMEM
+        # from each staged page's own flash address and device seed.
+        page = page_ref[...]               # (PB, 1) uint32
+        seed = seed_ref[...]               # (PB, 1) uint32
+        slot = jax.lax.broadcasted_iota(
+            jnp.uint32, (page_block, SLOTS), 1)
+        ctr = (page * jnp.uint32(SLOTS) + slot) ^ seed
         s_lo = mix2_32(ctr, _LO_SALT, jnp)         # (PB, 512)
         s_hi = mix2_32(ctr, _HI_SALT, jnp)
         q_lo = q_lo ^ s_lo[None]
@@ -74,18 +80,9 @@ def _search_kernel(lo_ref, hi_ref, q_ref, m_ref, base_ref, out_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("page_block", "randomized", "device_seed", "interpret"))
-def sim_search_kernel(lo, hi, queries, masks, page_base, *,
-                      page_block: int = 32, randomized: bool = False,
-                      device_seed: int = 0, interpret: bool = True):
-    """Run the search kernel.
-
-    lo, hi:    (N, 512) uint32 planes, N a multiple of ``page_block``
-               (ops.py pads)
-    queries:   (Q, 2) uint32;  masks: (Q, 2) uint32
-    page_base: scalar uint32 — global index of page 0 (randomization seed)
-    returns:   (Q, N, 16) uint32 packed match bitmaps
-    """
+    static_argnames=("page_block", "randomized", "interpret"))
+def _sim_search_call(lo, hi, queries, masks, page_ids, page_seeds, *,
+                     page_block: int, randomized: bool, interpret: bool):
     n_pages = lo.shape[0]
     n_queries = queries.shape[0]
     assert n_pages % page_block == 0, (n_pages, page_block)
@@ -93,7 +90,7 @@ def sim_search_kernel(lo, hi, queries, masks, page_base, *,
 
     kernel = functools.partial(
         _search_kernel, page_block=page_block, n_queries=n_queries,
-        randomized=randomized, device_seed=device_seed)
+        randomized=randomized)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -102,7 +99,8 @@ def sim_search_kernel(lo, hi, queries, masks, page_base, *,
             pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
             pl.BlockSpec((n_queries, 2), lambda i: (0, 0)),
             pl.BlockSpec((n_queries, 2), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((page_block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((page_block, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((n_queries, page_block, BITMAP_WORDS),
                                lambda i: (0, i, 0)),
@@ -111,4 +109,33 @@ def sim_search_kernel(lo, hi, queries, masks, page_base, *,
         interpret=interpret,
     )(jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32),
       jnp.asarray(queries, jnp.uint32), jnp.asarray(masks, jnp.uint32),
-      jnp.asarray(page_base, jnp.uint32).reshape(1, 1))
+      jnp.asarray(page_ids, jnp.uint32).reshape(-1, 1),
+      jnp.asarray(page_seeds, jnp.uint32).reshape(-1, 1))
+
+
+def sim_search_kernel(lo, hi, queries, masks, page_base, *,
+                      page_block: int = 32, randomized: bool = False,
+                      device_seed: int = 0, interpret: bool = True,
+                      page_ids=None, page_seeds=None):
+    """Run the search kernel.
+
+    lo, hi:     (N, 512) uint32 planes, N a multiple of ``page_block``
+                (ops.py pads)
+    queries:    (Q, 2) uint32;  masks: (Q, 2) uint32
+    page_base:  scalar — global index of page 0 (randomization seed) when
+                ``page_ids`` is not given
+    page_ids:   optional (N,) uint32 per-page flash addresses (overrides the
+                contiguous ``page_base + arange(N)`` default)
+    page_seeds: optional (N,) uint32 per-page device seeds (default: the
+                scalar ``device_seed`` for every page)
+    returns:    (Q, N, 16) uint32 packed match bitmaps
+    """
+    n_pages = lo.shape[0]
+    if page_ids is None:
+        page_ids = jnp.uint32(page_base) + jnp.arange(n_pages,
+                                                      dtype=jnp.uint32)
+    if page_seeds is None:
+        page_seeds = jnp.full(n_pages, device_seed & 0xFFFFFFFF, jnp.uint32)
+    return _sim_search_call(lo, hi, queries, masks, page_ids, page_seeds,
+                            page_block=page_block, randomized=randomized,
+                            interpret=interpret)

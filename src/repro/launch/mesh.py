@@ -6,20 +6,46 @@ Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
 A function (not a module-level constant) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before any jax
 initialization.
+
+jax-version constraint: ``jax.sharding.AxisType`` (and the ``axis_types``
+parameter of ``jax.make_mesh``) only exist from jax 0.5; on the pinned
+jax 0.4.37 every mesh axis is implicitly Auto, which is exactly what we
+ask for on newer jax — so ``make_mesh`` below is semantically identical
+on both sides of the version split.
 """
 from __future__ import annotations
 
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def _auto_axis_types(n_axes: int):
+    """(AxisType.Auto,) * n on jax >= 0.5, None on older jax."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n_axes
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where supported."""
+    types = _auto_axis_types(len(axes))
+    if types is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def production_mesh_spec(*, multi_pod: bool = False):
+    """(shape, axes) of the production mesh — pure, testable without devices."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return shape, axes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = production_mesh_spec(multi_pod=multi_pod)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU tests of the sharded code paths."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

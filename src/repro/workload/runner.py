@@ -2,6 +2,17 @@
 
 Mirrors the paper's measurement protocol (§VI-A4, footnote 6): statistics
 start after a 30 % warmup; QPS = measured queries / measured makespan.
+
+Two executors live here:
+
+  * ``run``            — the *timing* simulation on SSDSim (latency/energy,
+                         no real data);
+  * ``run_functional`` — the *functional* execution of the same op stream
+                         against real programmed pages through a
+                         MatchBackend, batching read bursts so each burst
+                         is one search launch + one gather launch on the
+                         kernel backend (§IV-E).  Both backends must return
+                         identical read values (tests/test_backend_parity).
 """
 from __future__ import annotations
 
@@ -10,12 +21,17 @@ import heapq
 
 import numpy as np
 
+from repro.backend import as_backend
+from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
+from repro.core.commands import Command
+from repro.core.page import mask_header_slots
 from repro.core.scheduler import DeadlineScheduler
 from repro.flash.params import FlashParams
 from repro.flash.ssd import SSDSim
-from .ycsb import Workload
+from .ycsb import KEYS_PER_PAGE, Workload, value_page_of
 
 WARMUP_FRACTION = 0.30
+FULL_MASK = 0xFFFFFFFFFFFFFFFF
 
 
 @dataclasses.dataclass
@@ -34,6 +50,105 @@ class RunResult:
     absorbed_writes: int
     batched_searches: int
     makespan_ns: float
+
+
+@dataclasses.dataclass
+class FunctionalRunResult:
+    read_values: np.ndarray   # (N,) uint64: full value read (0 where no hit)
+    read_hits: np.ndarray     # (N,) bool: True where a read op found its key
+    n_reads: int
+    n_writes: int
+    flushes: int              # backend flushes issued by the executor
+    kernel_launches: int      # device launches (0 on the scalar backend)
+
+
+def run_functional(workload: Workload, backend, *,
+                   burst: int = 64) -> FunctionalRunResult:
+    """Execute the op stream against real pages through a MatchBackend.
+
+    Key id ``k`` lives on key page ``k // 504`` at entry ``k % 504`` with
+    stored key ``k + 1`` (nonzero, distinct from the vacant-slot sentinel);
+    its value sits at the same entry of the §V-A paired value page.  Reads
+    accumulate into bursts of up to ``burst`` queries: the burst's searches
+    flush as one batch, then its value gathers as a second — so a YCSB read
+    burst is two kernel launches on the batched backend.  A write flushes
+    the open burst first (read-your-writes), updates the host mirror and
+    reprograms the value page through the backend.
+    """
+    if workload.keys is None:
+        raise ValueError("workload has no key stream "
+                         "(regenerate with ycsb.generate)")
+    backend = as_backend(backend)
+    n_key_pages = workload.n_index_pages // 2
+    n_keys = n_key_pages * KEYS_PER_PAGE
+    stored_keys = np.arange(1, n_keys + 1, dtype=np.uint64)
+    # Deterministic initial values (odd, so never the vacant sentinel).
+    values = (stored_keys * np.uint64(0x9E3779B97F4A7C15)) | np.uint64(1)
+
+    for p in range(n_key_pages):
+        s = p * KEYS_PER_PAGE
+        backend.program_entries(p, stored_keys[s:s + KEYS_PER_PAGE])
+        backend.program_entries(value_page_of(p, n_key_pages),
+                                values[s:s + KEYS_PER_PAGE])
+
+    n = len(workload.ops)
+    out = np.zeros(n, dtype=np.uint64)
+    hits = np.zeros(n, dtype=bool)
+    flushes = 0
+    pending: list[int] = []                 # op indices of queued reads
+
+    def resolve_burst() -> None:
+        nonlocal flushes
+        if not pending:
+            return
+        # Page routing comes from the workload's own placement fields so the
+        # timing executor (run) and this one always model the same layout.
+        searches = [(qi, backend.submit_search(Command.search(
+            int(workload.key_pages[qi]),
+            int(stored_keys[workload.keys[qi]]), FULL_MASK)))
+            for qi in pending]
+        pending.clear()
+        backend.flush()
+        flushes += 1
+        gathers = []
+        for qi, t in searches:
+            bitmap = mask_header_slots(t.result().bitmap_words)
+            slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+            if slots.size == 0:
+                continue
+            value_slot = int(slots[0])      # same entry on the value page
+            gathers.append((qi, value_slot, backend.submit_gather(
+                Command.gather(int(workload.value_pages[qi]),
+                               1 << (value_slot // SLOTS_PER_CHUNK)))))
+        backend.flush()
+        flushes += 1
+        for qi, value_slot, g in gathers:
+            off = (value_slot % SLOTS_PER_CHUNK) * 8
+            out[qi] = int.from_bytes(
+                bytes(g.result().chunks[0][off:off + 8]), "little")
+            hits[qi] = True
+
+    n_reads = n_writes = 0
+    for qi in range(n):
+        if workload.ops[qi] == 0:
+            n_reads += 1
+            pending.append(qi)
+            if len(pending) >= burst:
+                resolve_burst()
+        else:
+            n_writes += 1
+            resolve_burst()                 # read-your-writes ordering
+            k = int(workload.keys[qi])
+            values[k] = np.uint64(qi * 2 + 1)   # tagged by op index, odd
+            p = k // KEYS_PER_PAGE
+            s = p * KEYS_PER_PAGE
+            backend.program_entries(value_page_of(p, n_key_pages),
+                                    values[s:s + KEYS_PER_PAGE])
+    resolve_burst()
+    return FunctionalRunResult(
+        read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
+        flushes=flushes,
+        kernel_launches=backend.stats.kernel_launches)
 
 
 def run(workload: Workload, *, params: FlashParams, system: str,

@@ -15,6 +15,12 @@ import numpy as np
 KEYS_PER_PAGE = 504
 
 
+def value_page_of(key_page, n_key_pages: int):
+    """§V-A leaf placement: value page of key page i, second half of the
+    address space rotated by one so the pair lands on two different dies."""
+    return n_key_pages + (key_page + 1) % n_key_pages
+
+
 def zipf_probs(n: int, alpha: float) -> np.ndarray:
     if alpha <= 0.0:
         return np.full(n, 1.0 / n)
@@ -36,6 +42,9 @@ class Workload:
     alpha: float
     read_ratio: float
     n_index_pages: int
+    # Concrete key ids (rank-scrambled), one per op — lets the functional
+    # executor (runner.run_functional) replay the stream against real pages.
+    keys: np.ndarray | None = None
 
 
 def generate(n_queries: int, *, n_key_pages: int, read_ratio: float,
@@ -57,13 +66,11 @@ def generate(n_queries: int, *, n_key_pages: int, read_ratio: float,
     else:
         keys = ranks
     key_pages = (keys // KEYS_PER_PAGE).astype(np.int32)
-    # §V-A leaf layout: the value page of key page i lives in the second half
-    # of the address space, *rotated by one* so the pair always lands on two
-    # different dies — the controller placement that makes the chip-internal
-    # search->gather pipelining effective (and keeps both page buffers
-    # latched for hot leaves).
-    value_pages = n_key_pages + (key_pages + 1) % n_key_pages
+    # The rotated pairing keeps both page buffers latched for hot leaves and
+    # makes the chip-internal search->gather pipelining effective.
+    value_pages = value_page_of(key_pages, n_key_pages)
     ops = (rng.random(n_queries) >= read_ratio).astype(np.uint8)
     return Workload(ops=ops, key_pages=key_pages,
                     value_pages=value_pages.astype(np.int32), alpha=alpha,
-                    read_ratio=read_ratio, n_index_pages=2 * n_key_pages)
+                    read_ratio=read_ratio, n_index_pages=2 * n_key_pages,
+                    keys=keys.astype(np.int64))

@@ -1,6 +1,9 @@
 """Unit + property tests: range decomposition and BitWeaving column packing."""
 import numpy as np
 import pytest
+# hypothesis is an optional dev dependency (requirements-dev.txt);
+# skip cleanly on minimal installs so tier-1 collection stays green.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitweaving import Column, RowCodec

@@ -1,5 +1,9 @@
 """Hypothesis property tests on the system's core invariants."""
 import numpy as np
+import pytest
+# hypothesis is an optional dev dependency (requirements-dev.txt);
+# skip cleanly on minimal installs so tier-1 collection stays green.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bits import (pack_bitmap, u64_array_to_pairs, u64_to_pair,
