@@ -1,6 +1,8 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.flash.params import DEFAULT_PARAMS
@@ -46,5 +48,31 @@ class Timer:
         return (end - self.t0) * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    print(f"{name},{us_per_call:.2f},{derived}")
+_METRICS: list[dict] = []
+
+
+def emit(name: str, value: float, derived: str) -> None:
+    """Print a metric row and record it for ``write_bench_json``.
+
+    ``value`` is microseconds per call for timing metrics, raw units
+    (e.g. bytes) for the few counter metrics — the ``derived`` tag says
+    which.
+    """
+    _METRICS.append({"name": name, "value": round(float(value), 2),
+                     "derived": derived})
+    print(f"{name},{value:.2f},{derived}")
+
+
+def write_bench_json(bench_name: str, path: str | None = None) -> str:
+    """Persist every metric emitted so far as ``BENCH_<name>.json``.
+
+    CI uploads these files as build artifacts so the perf trajectory
+    accumulates across commits.  ``BENCH_JSON_DIR`` overrides the output
+    directory.
+    """
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    path = path or os.path.join(out_dir, f"BENCH_{bench_name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench_name, "metrics": _METRICS}, f, indent=2)
+    print(f"wrote {len(_METRICS)} metrics -> {path}")
+    return path

@@ -11,7 +11,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Timer, emit
+from benchmarks.common import Timer, emit, write_bench_json
 from repro.backend import make_backend
 from repro.core.commands import Command
 from repro.core.engine import SimChipArray
@@ -19,6 +19,8 @@ from repro.kernels.sim_search.ops import sim_search
 from repro.kernels.sim_gather.ops import sim_gather
 from repro.kernels.sim_fused.ops import sim_fused
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.workload.runner import run_functional
+from repro.workload.ycsb import generate
 
 
 def _programmed_backend(name: str, n_pages: int, seed: int = 5):
@@ -77,6 +79,100 @@ def backend_batch_comparison(n_pages: int = 32,
              f"q={n_q}_pages={n_pages}_one_launch_speedup={speedup:.1f}x")
 
 
+def functional_burst_comparison(n_queries: int = 384,
+                                n_key_pages: int = 8) -> None:
+    """End-to-end ``run_functional``: scalar vs batched-split vs fused.
+
+    The read-heavy YCSB stream is replayed three ways: per-command scalar
+    chips, the batched backend's split path (search launch -> host bitmap
+    decode -> gather launch, 2 launches/burst) and the fused lookup path
+    (1 launch/burst, match->slot-select-value-gather in-kernel).  Page
+    programming is identical setup for all three paths; a 1-query run per
+    path measures it and its time is subtracted, so the emitted per-query
+    numbers and the regression gate reflect burst execution only.  The gate
+    mirrors the search section's: the fused path must beat the scalar
+    reference by >= 2x (it shows more; headroom covers interpret-mode
+    noise).  Values must be bit-identical across all three.
+    """
+    wl = generate(n_queries, n_key_pages=n_key_pages, read_ratio=1.0,
+                  alpha=0.5, seed=9)
+    wl_tiny = generate(1, n_key_pages=n_key_pages, read_ratio=1.0,
+                       alpha=0.5, seed=9)
+    pages_per_chip = max(wl.n_index_pages // 4 + 1, 8)
+
+    def once(name: str, fused: bool, workload=wl):
+        arr = SimChipArray(n_chips=4, pages_per_chip=pages_per_chip,
+                           device_seed=3)
+        return run_functional(workload, make_backend(name, arr), burst=64,
+                              fused=fused)
+
+    results, times = {}, {}
+    for label, name, fused in (("scalar", "scalar", False),
+                               ("batched", "batched", False),
+                               ("fused", "batched", True)):
+        once(name, fused)                       # warm compile caches
+        once(name, fused, wl_tiny)              # ... incl. tiny-burst shapes
+        with Timer() as t0:
+            once(name, fused, wl_tiny)          # programming-dominated run
+        with Timer() as t:
+            results[label] = once(name, fused)
+        times[label] = max(t.elapsed_us - t0.elapsed_us, 1.0)
+
+    for label, r in results.items():
+        np.testing.assert_array_equal(results["scalar"].read_values,
+                                      r.read_values)
+    assert results["fused"].kernel_launches == results["fused"].flushes, \
+        "fused read burst must be exactly one launch per flush"
+    speed_b = times["scalar"] / times["batched"]
+    speed_f = times["scalar"] / times["fused"]
+    assert speed_f >= 2.0, \
+        f"fused run_functional speedup {speed_f:.1f}x < 2x gate"
+    emit("functional_scalar", times["scalar"] / n_queries,
+         f"q={n_queries}_per_command_reference")
+    emit("functional_batched", times["batched"] / n_queries,
+         f"q={n_queries}_2_launches_per_burst_speedup={speed_b:.1f}x")
+    emit("functional_fused", times["fused"] / n_queries,
+         f"q={n_queries}_1_launch_per_burst_speedup={speed_f:.1f}x")
+
+
+def staged_bytes_per_flush(n_pages: int = 32, n_q: int = 16) -> None:
+    """Measure host->device page traffic across repeated identical flushes.
+
+    With the device-resident plane store, the first flush stages the
+    working set (4 KiB/page) and every later flush of the same pages ships
+    ZERO page bytes — only the (Q, 2) query operands.  A reprogram
+    invalidates exactly one arena row (one page restage).
+    """
+    backend, page_keys = _programmed_backend("batched", n_pages)
+    rng = np.random.default_rng(2)
+    cmds = [Command.search(p, int(page_keys[p][rng.integers(0, 404)]))
+            for p in range(n_pages) for _ in range(n_q // 4)]
+
+    deltas = []
+    for _ in range(3):
+        before = backend.stats.staged_bytes
+        tickets = [backend.submit_search(c) for c in cmds]
+        backend.flush()
+        assert all(t.done for t in tickets)
+        deltas.append(backend.stats.staged_bytes - before)
+    assert deltas[0] == n_pages * 4096, deltas
+    assert deltas[1] == deltas[2] == 0, \
+        f"warm flush restaged page bytes: {deltas}"
+    emit("backend_staged_bytes_flush0", deltas[0],
+         f"pages={n_pages}_cold_arena_population_bytes")
+    emit("backend_staged_bytes_warm", deltas[1],
+         f"pages={n_pages}_steady_state_restage_bytes(must_be_0)")
+
+    # One reprogram dirties exactly one row.
+    backend.chips.program_entries(0, page_keys[0][::-1].copy())
+    before = backend.stats.staged_bytes
+    backend.search(Command.search(0, int(page_keys[0][5])))
+    emit("backend_staged_bytes_after_reprogram",
+         backend.stats.staged_bytes - before,
+         "single_dirty_row_restage_bytes(=4096)")
+    assert backend.stats.staged_bytes - before == 4096
+
+
 def main(scale: int = 1) -> None:
     rng = np.random.default_rng(0)
     n_pages, n_q = 64, 8
@@ -105,12 +201,12 @@ def main(scale: int = 1) -> None:
     emit("kernel_sim_gather", t.elapsed_us,
          f"pages={n_pages}_max_out=16_mxu_onehot_matmul")
 
-    f = sim_fused(lo, hi, q[0], m[0], max_out=8)
+    f = sim_fused(lo, hi, q, m, max_out=8)
     jax.block_until_ready(f)
     with Timer() as t:
-        jax.block_until_ready(sim_fused(lo, hi, q[0], m[0], max_out=8))
-    emit("kernel_sim_fused", t.elapsed_us,
-         "one_page_pass_for_search+gather(saves_1_hbm_read)")
+        jax.block_until_ready(sim_fused(lo, hi, q, m, max_out=8))
+    emit(f"kernel_sim_fused_q{n_q}", t.elapsed_us,
+         f"q={n_q}_one_page_pass_for_search+gather(saves_1_hbm_read)")
 
     B, S, H, HKV, D = 1, 256, 4, 2, 64
     qa = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
@@ -125,6 +221,9 @@ def main(scale: int = 1) -> None:
          f"causal_gqa_flops={flops}")
 
     backend_batch_comparison()
+    functional_burst_comparison()
+    staged_bytes_per_flush()
+    write_bench_json("kernel_micro")
 
 
 if __name__ == "__main__":

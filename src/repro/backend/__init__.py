@@ -1,12 +1,16 @@
-"""Interchangeable execution backends for the SiM search/gather contract.
+"""Interchangeable execution backends for the SiM search/gather/lookup
+contract.
 
-See base.py for the contract, scalar.py for the per-page reference path and
-batched.py for the single-launch Pallas fast path.
+See base.py for the contract, scalar.py for the per-page reference path,
+batched.py for the single-launch Pallas fast path and planestore.py for the
+device-resident page-plane arena behind it.
 """
 from .base import (BackendStats, MatchBackend, Ticket, as_backend,
                    make_backend)
 from .batched import BatchedKernelBackend
+from .planestore import PlaneStore
 from .scalar import ScalarBackend
 
-__all__ = ["BackendStats", "MatchBackend", "Ticket", "as_backend",
-           "make_backend", "ScalarBackend", "BatchedKernelBackend"]
+__all__ = ["BackendStats", "MatchBackend", "PlaneStore", "Ticket",
+           "as_backend", "make_backend", "ScalarBackend",
+           "BatchedKernelBackend"]

@@ -12,21 +12,32 @@ Two interchangeable implementations ship today:
   * ``ScalarBackend`` (scalar.py) — the numpy ``SimChip``/``SimChipArray``
     functional model, executing queued commands one page at a time.  This is
     the bit-exact reference, with the full latch/ECC machinery.
-  * ``BatchedKernelBackend`` (batched.py) — stages every queued search into
-    page-plane arrays and executes them in a single ``sim_search`` Pallas
-    launch (and queued gathers in a single ``sim_gather`` launch), with the
-    per-page randomization stream regenerated in-kernel.
+  * ``BatchedKernelBackend`` (batched.py) — keeps stored pages *device
+    resident* in a ``PlaneStore`` arena (planestore.py) and executes queued
+    searches in a single ``sim_search`` Pallas launch, queued gathers in a
+    single ``sim_gather`` launch, and queued lookups in a single fused
+    ``sim_fused_lookup`` launch, with the per-page randomization stream
+    regenerated in-kernel.  After warm-up only (Q, 2) query operands cross
+    host->device per flush; ``program_entries`` invalidates exactly the
+    rewritten page's arena row through the engine's write observers.
+
+Besides search/gather, backends implement ``submit_lookup`` — the fused
+point-lookup primitive (key-page search + first-matching-slot value gather,
+the §V-A paired-page pattern) that a YCSB read burst or a B+Tree
+``lookup_batch`` resolves in ONE device launch instead of a search launch,
+a Python bitmap decode, and a gather launch.
 
 Future backends the ROADMAP names (sharded, async, multi-chip) implement
-the same three methods: ``submit_search``, ``submit_gather``, ``flush``.
+the same four methods: ``submit_search``, ``submit_gather``,
+``submit_lookup``, ``flush``.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
 
-from repro.core.commands import (Command, GatherResponse, ReadFullResponse,
-                                 SearchResponse)
+from repro.core.commands import (Command, GatherResponse, LookupResponse,
+                                 ReadFullResponse, SearchResponse)
 from repro.core.engine import SimChipArray
 
 
@@ -34,10 +45,15 @@ from repro.core.engine import SimChipArray
 class BackendStats:
     searches: int = 0          # search commands resolved
     gathers: int = 0           # gather commands resolved
+    lookups: int = 0           # fused lookup commands resolved
     flushes: int = 0           # non-empty flush() calls
     kernel_launches: int = 0   # device launches (batched backend only)
-    staged_pages: int = 0      # page rows staged across launches
+    staged_pages: int = 0      # page rows referenced across launches
     staged_queries: int = 0    # query rows staged across launches
+    staged_bytes: int = 0      # page-plane bytes shipped host->device; with
+                               # the device-resident store this stops growing
+                               # once the working set is warm (only new or
+                               # reprogrammed pages ever re-ship)
     batched_searches: int = 0  # searches that shared a launch with >= 1 peer
 
 
@@ -95,6 +111,9 @@ class MatchBackend(abc.ABC):
     def gather(self, cmd: Command) -> GatherResponse:
         return self.submit_gather(cmd).result()
 
+    def lookup(self, cmd: Command) -> LookupResponse:
+        return self.submit_lookup(cmd).result()
+
     # ------------------------------------------------------------ deferred
     @abc.abstractmethod
     def submit_search(self, cmd: Command) -> Ticket:
@@ -103,6 +122,12 @@ class MatchBackend(abc.ABC):
     @abc.abstractmethod
     def submit_gather(self, cmd: Command) -> Ticket:
         """Queue a gather; the ticket resolves at the next flush()."""
+
+    @abc.abstractmethod
+    def submit_lookup(self, cmd: Command) -> Ticket:
+        """Queue a fused point lookup (Op.LOOKUP): search the key page,
+        select the first matching user slot, gather that slot's chunk from
+        the paired value page.  Resolves to a LookupResponse at flush()."""
 
     @abc.abstractmethod
     def flush(self) -> None:

@@ -1,20 +1,31 @@
-"""Batched MatchBackend: queued commands execute as one Pallas launch.
+"""Batched MatchBackend: queued commands execute as one Pallas launch over
+device-resident page planes.
 
-The deferred submission queue is staged into dense device operands at
-flush time:
+Stored pages live in a ``PlaneStore`` arena (planestore.py): persistent JAX
+device arrays holding each staged page's lo/hi word planes plus its
+chip-local flash address and device seed.  Pages are populated lazily the
+first time a flush references them and invalidated incrementally through
+the engine's write observers, so a steady-state flush ships **zero page
+bytes** host->device — only the (Q, 2) query operands move, the TPU
+analogue of the chip keeping operands in-array while only queries and 64 B
+bitmaps cross the bus (paper §III-B).
 
-  * every *unique* page touched by a queued search becomes one row of the
-    (N, 512) lo/hi word planes, carrying its chip-local flash address and
-    per-chip device seed so the kernel regenerates the §IV-C1 randomization
-    stream in-VMEM (stored images are staged as-is, bit errors included);
+At flush time the deferred queues stage into dense device operands:
+
+  * every *unique* page touched by a queued search becomes one arena-row
+    reference; the kernel regenerates the §IV-C1 randomization stream
+    in-VMEM from the row's address/seed operands (stored images are staged
+    as-is, bit errors included);
   * every *unique* (query, mask) pair becomes one row of the (Q, 2) query
     operands — Q queries match against N pages in a single ``sim_search``
-    launch, the §IV-E cross-page multi-query batch that amortizes one
-    staging pass over the whole burst;
-  * queued gathers stage per-command (page chunk words, chunk bitmap) rows
-    and compact through one ``sim_gather`` launch; de-randomization and
-    inner-code verification of the selected chunks happen host-side, as on
-    the controller.
+    launch, the §IV-E cross-page multi-query batch;
+  * queued gathers reference per-command arena rows and compact through one
+    ``sim_gather`` launch; de-randomization and inner-code verification of
+    the selected chunks happen host-side, batched over the whole burst;
+  * queued lookups (Op.LOOKUP) run the fused ``sim_fused_lookup`` kernel:
+    key-page search, first-matching-user-slot selection, and the paired
+    value page's same-slot chunk gather all happen in ONE launch — no
+    bitmap round trip through Python between search and gather.
 
 Results are bit-identical to ``ScalarBackend`` for every programmed page
 (damaged or not): both paths match against the same stored image with the
@@ -24,41 +35,47 @@ pipelining — so ``SearchResponse.open_verdict`` always reads CLEAN here.
 Workloads that need open verdicts (error-injection studies) use the scalar
 backend; see tests/test_backend_parity.py for the exact contract.
 
-Query rows are padded to the next power of two and page rows to a multiple
-of ``page_block``, so repeated flushes of similar-size bursts reuse the
-same compiled kernel instead of retracing.
+Query rows are padded to the next power of two and page/gather/lookup rows
+to a power-of-two multiple of the block size (``padded_rows``), so repeated
+flushes of similar-size bursts reuse the same compiled kernel instead of
+retracing on every distinct burst size.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ecc
-from repro.core.bits import CHUNK_BYTES, CHUNKS_PER_PAGE, popcount_words, \
-    slot_words_to_bytes, unpack_bitmap
-from repro.core.commands import Command, GatherResponse, Op, SearchResponse
+from repro.core.bits import CHUNK_BYTES, CHUNKS_PER_PAGE, SLOTS_PER_CHUNK, \
+    popcount_words, slot_words_to_bytes, unpack_bitmap
+from repro.core.commands import (Command, GatherResponse, LookupResponse,
+                                 Op, SearchResponse)
 from repro.core.ecc import OpenVerdict
-from repro.core.engine import SimChip, SimChipArray
-from repro.core.randomize import chunk_stream_words
-from repro.kernels.layout import pages_to_chunk_words, pages_to_planes
+from repro.core.engine import SimChipArray
+from repro.core.randomize import chunk_stream_words_batch
+from repro.kernels.layout import planes_to_chunk_words_xp
+from repro.kernels.sim_fused.ops import sim_fused_lookup
+from repro.kernels.sim_fused.sim_fused import NO_SLOT
 from repro.kernels.sim_gather.ops import sim_gather
 from repro.kernels.sim_search.ops import sim_search
 
 from .base import MatchBackend, Ticket
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+from .planestore import PlaneStore, next_pow2, padded_rows
 
 
 class BatchedKernelBackend(MatchBackend):
     def __init__(self, chips: SimChipArray, *, page_block: int = 32,
-                 use_kernel: bool = True, interpret: bool | None = None):
+                 lookup_block: int = 8, use_kernel: bool = True,
+                 interpret: bool | None = None):
         super().__init__(chips)
         self.page_block = page_block
+        self.lookup_block = lookup_block
         self.use_kernel = use_kernel
         self.interpret = interpret
+        self.store = PlaneStore(chips, block=page_block)
         self._searches: list[tuple[Command, Ticket]] = []
         self._gathers: list[tuple[Command, Ticket]] = []
+        self._lookups: list[tuple[Command, Ticket]] = []
 
     # ------------------------------------------------------------ deferred
     def submit_search(self, cmd: Command) -> Ticket:
@@ -75,42 +92,45 @@ class BatchedKernelBackend(MatchBackend):
         self._gathers.append((cmd, t))
         return t
 
+    def submit_lookup(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.LOOKUP or cmd.value_page is None:
+            raise ValueError(f"not a lookup command: {cmd}")
+        t = Ticket(self)
+        self._lookups.append((cmd, t))
+        return t
+
     @property
     def pending(self) -> int:
-        return len(self._searches) + len(self._gathers)
+        return len(self._searches) + len(self._gathers) + len(self._lookups)
 
     def flush(self) -> None:
-        if not self._searches and not self._gathers:
+        if not (self._searches or self._gathers or self._lookups):
             return
         self.stats.flushes += 1
         searches, self._searches = self._searches, []
+        lookups, self._lookups = self._lookups, []
         gathers, self._gathers = self._gathers, []
         if searches:
             self._flush_searches(searches)
+        if lookups:
+            self._flush_lookups(lookups)
         if gathers:
             self._flush_gathers(gathers)
+        # The plane store is the only source of host->device page traffic.
+        self.stats.staged_bytes = self.store.staged_bytes
 
     # ------------------------------------------------------------- staging
-    def _stored(self, page_addr: int) -> tuple[SimChip, int]:
-        chip, local = self.chips.route(page_addr)
-        chip._get(local)                       # KeyError on unprogrammed
-        return chip, local
-
     def _flush_searches(self, searches) -> None:
-        # Stage unique pages and unique (query, mask) operand pairs.
+        # Unique pages -> arena rows; unique (query, mask) -> operand rows.
         page_rows: dict[int, int] = {}
         query_rows: dict[tuple, int] = {}
-        raws, page_ids, page_seeds, chip_rows = [], [], [], []
+        addrs: list[int] = []
         q_pairs, m_pairs = [], []
         placements = []                        # (qi, pi) per command
         for cmd, _ in searches:
             if cmd.page_addr not in page_rows:
-                chip, local = self._stored(cmd.page_addr)
-                page_rows[cmd.page_addr] = len(raws)
-                raws.append(chip.pages[local].raw)
-                page_ids.append(local)
-                page_seeds.append(chip.device_seed & 0xFFFFFFFF)
-                chip_rows.append(chip)
+                page_rows[cmd.page_addr] = len(addrs)
+                addrs.append(cmd.page_addr)
             key = (cmd.query, cmd.mask)
             if key not in query_rows:
                 query_rows[key] = len(q_pairs)
@@ -118,26 +138,28 @@ class BatchedKernelBackend(MatchBackend):
                 m_pairs.append(cmd.mask)
             placements.append((query_rows[key], page_rows[cmd.page_addr]))
 
+        rows = self.store.rows_for(addrs)      # stages new + dirty only
         # One staged sense per unique page, amortized over all queries.
-        for chip in chip_rows:
+        for a in addrs:
+            chip, _ = self.chips.route(a)
             chip.counters.array_reads += 1
 
-        lo, hi = pages_to_planes(np.stack(raws))
+        n_pages = padded_rows(len(addrs), self.page_block)
+        lo, hi, page_ids, page_seeds = self.store.take(rows, n_pages)
         n_queries = len(q_pairs)
-        q = np.zeros((_next_pow2(n_queries), 2), dtype=np.uint32)
+        q = np.zeros((next_pow2(n_queries), 2), dtype=np.uint32)
         m = np.zeros_like(q)
         q[:n_queries] = np.asarray(q_pairs, dtype=np.uint32)
         m[:n_queries] = np.asarray(m_pairs, dtype=np.uint32)
 
         out = np.asarray(sim_search(
             lo, hi, q, m, randomized=True,
-            page_ids=np.asarray(page_ids, dtype=np.uint32),
-            page_seeds=np.asarray(page_seeds, dtype=np.uint32),
+            page_ids=page_ids, page_seeds=page_seeds,
             page_block=self.page_block, use_kernel=self.use_kernel,
-            interpret=self.interpret))        # (Qpad, N, 16)
+            interpret=self.interpret))         # (Qpad, Npad, 16)
 
         self.stats.kernel_launches += 1
-        self.stats.staged_pages += len(raws)
+        self.stats.staged_pages += len(addrs)
         self.stats.staged_queries += n_queries
         self.stats.searches += len(searches)
         if len(searches) > 1:
@@ -152,42 +174,138 @@ class BatchedKernelBackend(MatchBackend):
                 match_count=int(popcount_words(bitmap).sum()),
                 open_verdict=OpenVerdict.CLEAN.value))
 
+    # -------------------------------------------------------------- lookups
+    def _flush_lookups(self, lookups) -> None:
+        """Fused read burst: search + slot select + value gather, 1 launch."""
+        key_addrs = [cmd.page_addr for cmd, _ in lookups]
+        val_addrs = [cmd.value_page for cmd, _ in lookups]
+        k_rows = self.store.rows_for(key_addrs)
+        v_rows = self.store.rows_for(val_addrs)
+
+        n = len(lookups)
+        n_pad = padded_rows(n, self.lookup_block)
+        klo, khi, kids, kseeds = self.store.take(k_rows, n_pad)
+        vlo, vhi, _, _ = self.store.take(v_rows, n_pad)
+        q = np.zeros((n_pad, 2), dtype=np.uint32)
+        m = np.full((n_pad, 2), 0xFFFFFFFF, dtype=np.uint32)  # pad rows miss
+        q[:n] = np.asarray([cmd.query for cmd, _ in lookups], np.uint32)
+        m[:n] = np.asarray([cmd.mask for cmd, _ in lookups], np.uint32)
+
+        bm, val, slots = sim_fused_lookup(
+            klo, khi, vlo, vhi, q, m, randomized=True,
+            key_ids=kids, key_seeds=kseeds, row_block=self.lookup_block,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        bm = np.asarray(bm)[:n]
+        val = np.asarray(val)[:n]
+        slots = np.asarray(slots)[:n]
+
+        self.stats.kernel_launches += 1
+        self.stats.lookups += n
+        self.stats.staged_pages += len(set(key_addrs) | set(val_addrs))
+        self.stats.staged_queries += n
+        counts = popcount_words(bm)            # (n,) per-row match totals
+
+        for a in set(key_addrs):
+            chip, _ = self.chips.route(a)
+            chip.counters.array_reads += 1
+
+        # Batched host tail: de-randomize + inner-code-verify every hit's
+        # value chunk in one vectorized pass (controller side).
+        hit = slots < NO_SLOT
+        hit_idx = np.nonzero(hit)[0]
+        values = [None] * n
+        parity = np.ones(n, dtype=bool)
+        if hit_idx.size:
+            v_locals, v_seeds, parities = [], [], []
+            chunks = slots[hit_idx] // SLOTS_PER_CHUNK
+            for i, c in zip(hit_idx, chunks):
+                chip, local = self.chips.route(val_addrs[int(i)])
+                v_locals.append(local)
+                v_seeds.append(chip.device_seed & 0xFFFFFFFF)
+                parities.append(chip.pages[local].chunk_parities[int(c)])
+                chip.counters.array_reads += 1
+                chip.counters.gathers += 1
+                chip.counters.chunks_gathered += 1
+            streams = chunk_stream_words_batch(v_locals, chunks, v_seeds)
+            words = val[hit_idx].reshape(-1, SLOTS_PER_CHUNK, 2)
+            plain = slot_words_to_bytes(words ^ streams)   # (K, 64) bytes
+            parity[hit_idx] = (ecc.crc32_rows(plain)
+                               == np.asarray(parities, np.uint32))
+            offs = (slots[hit_idx] % SLOTS_PER_CHUNK) * 8
+            for j, i in enumerate(hit_idx):
+                values[int(i)] = bytes(plain[j, offs[j]:offs[j] + 8])
+
+        for i, (cmd, ticket) in enumerate(lookups):
+            chip, _ = self.chips.route(cmd.page_addr)
+            chip.counters.searches += 1
+            resp = SearchResponse(bitmap_words=bm[i].copy(),
+                                  match_count=int(counts[i]),
+                                  open_verdict=OpenVerdict.CLEAN.value)
+            ticket._resolve(LookupResponse(
+                search=resp,
+                value_slot=int(slots[i]) if hit[i] else None,
+                value=values[i], parity_ok=bool(parity[i])))
+
+    # -------------------------------------------------------------- gathers
     def _flush_gathers(self, gathers) -> None:
-        rows, bitmaps, owners = [], [], []
-        for cmd, _ in gathers:
-            chip, local = self._stored(cmd.page_addr)
-            rows.append(chip.pages[local].raw)
-            bitmaps.append(cmd.chunk_bitmap)
-            owners.append((chip, local))
-        chunk_words = pages_to_chunk_words(np.stack(rows))
-        bm = np.asarray(bitmaps, dtype=np.uint32)
+        addrs = [cmd.page_addr for cmd, _ in gathers]
+        rows = self.store.rows_for(addrs)
+        n = len(gathers)
+        n_pad = padded_rows(n, self.page_block)
+        lo, hi, _, _ = self.store.take(rows, n_pad)
+        chunk_words = planes_to_chunk_words_xp(lo, hi, jnp)
+        bm = np.zeros((n_pad, 2), dtype=np.uint32)
+        bm[:n] = np.asarray([cmd.chunk_bitmap for cmd, _ in gathers],
+                            np.uint32)
         out, _counts = sim_gather(chunk_words, bm,
                                   max_out=CHUNKS_PER_PAGE,
+                                  page_block=self.page_block,
                                   interpret=self.interpret,
                                   use_kernel=self.use_kernel)
-        out = np.asarray(out)                  # (R, 64, 16) uint32
+        out = np.asarray(out)[:n]              # (R, 64, 16) uint32
         self.stats.kernel_launches += 1
-        self.stats.gathers += len(gathers)
+        self.stats.gathers += n
 
+        # Batched host tail: one stream regeneration + one CRC pass for
+        # every selected chunk of the whole burst.
+        owners, all_locals, all_chunks, all_seeds, all_parities = \
+            [], [], [], [], []
+        chunk_ids_per = []
+        for cmd, _ in gathers:
+            chip, local = self.chips.route(cmd.page_addr)
+            owners.append((chip, local))
+            bits = unpack_bitmap(np.asarray(cmd.chunk_bitmap, np.uint32),
+                                 n_bits=CHUNKS_PER_PAGE)
+            chunk_ids = np.nonzero(bits)[0]
+            chunk_ids_per.append(chunk_ids)
+            all_locals.extend([local] * chunk_ids.size)
+            all_chunks.extend(chunk_ids.tolist())
+            all_seeds.extend([chip.device_seed & 0xFFFFFFFF]
+                             * chunk_ids.size)
+            all_parities.append(chip.pages[local].chunk_parities[chunk_ids])
+
+        k_total = len(all_chunks)
+        if k_total:
+            words = np.concatenate([
+                out[r, :ids.size] for r, ids in enumerate(chunk_ids_per)
+                if ids.size]).reshape(k_total, SLOTS_PER_CHUNK, 2)
+            streams = chunk_stream_words_batch(all_locals, all_chunks,
+                                               all_seeds)
+            plain_all = slot_words_to_bytes(words ^ streams)
+            parity_all = (ecc.crc32_rows(plain_all)
+                          == np.concatenate(all_parities))
+        else:
+            plain_all = np.zeros((0, CHUNK_BYTES), dtype=np.uint8)
+            parity_all = np.zeros(0, dtype=bool)
+
+        pos = 0
         for r, (cmd, ticket) in enumerate(gathers):
             chip, local = owners[r]
-            sp = chip.pages[local]
-            bits = unpack_bitmap(bm[r], n_bits=CHUNKS_PER_PAGE)
-            chunk_ids = np.nonzero(bits)[0]
+            chunk_ids = chunk_ids_per[r]
             k = int(chunk_ids.size)
-            if k:
-                # Controller side: de-randomize the compacted chunks with
-                # their chunk-addressed streams, then verify inner codes.
-                words = out[r, :k].reshape(k, 8, 2)
-                streams = np.stack([
-                    chunk_stream_words(local, int(c), chip.device_seed)
-                    for c in chunk_ids])
-                plain = slot_words_to_bytes(words ^ streams)
-                parity_ok = (ecc.crc32_rows(plain)
-                             == sp.chunk_parities[chunk_ids])
-            else:
-                plain = np.zeros((0, CHUNK_BYTES), dtype=np.uint8)
-                parity_ok = np.zeros(0, dtype=bool)
+            plain = plain_all[pos:pos + k]
+            parity_ok = parity_all[pos:pos + k]
+            pos += k
             chip.counters.array_reads += 1
             chip.counters.gathers += 1
             chip.counters.chunks_gathered += k

@@ -1,0 +1,168 @@
+"""Device-resident page-plane store for the batched kernel backend.
+
+The SiM chip's entire advantage is that stored pages never cross the bus —
+only queries and 64 B bitmaps move (paper §III-B).  The TPU analogue: keep
+every staged page's word planes *resident on the device* so a steady-state
+flush ships only the (Q, 2) query operands, not 4 KiB per page per flush.
+
+The store is a block-aligned arena of persistent JAX arrays:
+
+    _lo, _hi    : (cap, 512) uint32   — the de-interleaved word planes
+    _ids        : (cap, 1)   uint32   — chip-local flash address per row
+    _seeds      : (cap, 1)   uint32   — device seed per row
+
+Rows are assigned lazily the first time a flush references a page and are
+re-staged *incrementally*: the store subscribes to the write path of its
+``SimChipArray`` (``add_observer``), so a ``program_entries`` — or a bit-error
+injection or ECC repair, anything that mutates the stored image — marks only
+that page's row dirty.  The next flush that touches the page ships exactly
+one 4 KiB row host->device; untouched pages ship zero bytes.  The arena
+capacity grows by power-of-two blocks and existing rows are carried over
+with a device-side copy, so growth never re-ships resident pages.
+
+``staged_bytes``/``staged_rows`` count actual host->device page-plane
+traffic; the kernel-micro benchmark asserts they stop growing once the
+working set is warm (the zero-restage claim of the ROADMAP's hot-path
+mandate).
+"""
+from __future__ import annotations
+
+import weakref
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import PAGE_BYTES, SLOTS_PER_PAGE
+from repro.core.engine import SimChipArray
+from repro.kernels.layout import pages_to_planes
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (and >= 1)."""
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+def padded_rows(n: int, block: int) -> int:
+    """Pad a row count to a power-of-two multiple of ``block``.
+
+    Both flush paths use this geometry so repeated bursts of *similar* (not
+    identical) size reuse the same compiled kernel instead of retracing on
+    every distinct burst size.
+    """
+    return block * next_pow2(-(-n // block))
+
+
+class PlaneStore:
+    """Arena of device-resident page planes, invalidated by the write path."""
+
+    def __init__(self, chips: SimChipArray, *, block: int = 32):
+        self.chips = chips
+        self.block = block
+        self._row: dict[int, int] = {}      # global page addr -> arena row
+        self._addrs: list[int] = []         # arena row -> global page addr
+        self._dirty: set[int] = set()
+        self._cap = 0
+        self._lo = self._hi = None          # (cap, 512) uint32
+        self._ids = self._seeds = None      # (cap, 1) uint32
+        self.staged_rows = 0                # rows shipped host->device, ever
+        self.staged_bytes = 0               # page-plane bytes shipped, ever
+        # Subscribe through a weakref so an abandoned store (and its device
+        # arena) stays collectable — the chip array outlives backends.
+        ref = weakref.ref(self)
+        chips.add_observer(lambda addr, _r=ref: (
+            _r()._on_write(addr) if _r() is not None else None))
+
+    # ------------------------------------------------------------ bookkeeping
+    @property
+    def resident_rows(self) -> int:
+        return len(self._addrs)
+
+    def _on_write(self, page_addr: int) -> None:
+        if page_addr in self._row:
+            self._dirty.add(page_addr)
+
+    def _grow(self, need: int) -> None:
+        cap = max(self._cap, self.block)
+        while cap < need:
+            cap *= 2
+        if cap == self._cap:
+            return
+        pad = ((0, cap - self._cap), (0, 0))
+        if self._lo is None:
+            self._lo = jnp.zeros((cap, SLOTS_PER_PAGE), jnp.uint32)
+            self._hi = jnp.zeros((cap, SLOTS_PER_PAGE), jnp.uint32)
+            self._ids = jnp.zeros((cap, 1), jnp.uint32)
+            self._seeds = jnp.zeros((cap, 1), jnp.uint32)
+        else:
+            # Device-side copy: growth never re-ships resident pages.
+            self._lo = jnp.pad(self._lo, pad)
+            self._hi = jnp.pad(self._hi, pad)
+            self._ids = jnp.pad(self._ids, pad)
+            self._seeds = jnp.pad(self._seeds, pad)
+        self._cap = cap
+
+    # ---------------------------------------------------------------- staging
+    def rows_for(self, page_addrs) -> np.ndarray:
+        """Arena rows for global page addresses, staging new + dirty pages.
+
+        Raises KeyError (via the chip model) on unprogrammed pages, like the
+        per-flush staging it replaces.  Returns (len(page_addrs),) int32.
+        """
+        rows = np.empty(len(page_addrs), np.int32)
+        stage: list[int] = []
+        queued = set()
+        for i, a in enumerate(page_addrs):
+            a = int(a)
+            r = self._row.get(a)
+            if r is None:
+                chip, local = self.chips.route(a)
+                chip._get(local)            # KeyError on unprogrammed
+                r = len(self._addrs)
+                self._row[a] = r
+                self._addrs.append(a)
+                if a not in queued:
+                    stage.append(a)
+                    queued.add(a)
+            elif a in self._dirty and a not in queued:
+                stage.append(a)
+                queued.add(a)
+            rows[i] = r
+        if len(self._addrs) > self._cap:
+            self._grow(len(self._addrs))
+        if stage:
+            self._stage(stage)
+        return rows
+
+    def _stage(self, addrs: list[int]) -> None:
+        """Ship the listed pages' planes host->device (the only page bytes
+        that ever cross after warm-up: new rows and dirty rows)."""
+        idx = jnp.asarray(np.array([self._row[a] for a in addrs], np.int32))
+        raws, ids, seeds = [], [], []
+        for a in addrs:
+            chip, local = self.chips.route(a)
+            raws.append(chip.pages[local].raw)
+            ids.append(local)
+            seeds.append(chip.device_seed & 0xFFFFFFFF)
+        lo, hi = pages_to_planes(np.stack(raws))
+        self._lo = self._lo.at[idx].set(jnp.asarray(lo))
+        self._hi = self._hi.at[idx].set(jnp.asarray(hi))
+        self._ids = self._ids.at[idx].set(
+            jnp.asarray(np.asarray(ids, np.uint32)[:, None]))
+        self._seeds = self._seeds.at[idx].set(
+            jnp.asarray(np.asarray(seeds, np.uint32)[:, None]))
+        self._dirty.difference_update(addrs)
+        self.staged_rows += len(addrs)
+        self.staged_bytes += len(addrs) * PAGE_BYTES
+
+    # ----------------------------------------------------------------- access
+    def take(self, rows: np.ndarray, pad_to: int):
+        """Device-side row gather, padded to ``pad_to`` rows (repeats row 0).
+
+        Returns (lo (P, 512), hi (P, 512), ids (P,), seeds (P,)) as device
+        arrays — no page bytes cross the bus here, only the row indices.
+        """
+        r = np.zeros(pad_to, np.int32)
+        r[:len(rows)] = rows
+        ridx = jnp.asarray(r)
+        return (self._lo[ridx], self._hi[ridx],
+                self._ids[ridx, 0], self._seeds[ridx, 0])

@@ -5,11 +5,19 @@ interface.  Every queued command walks the full functional model — latch
 pipeline, optimistic-open verdicts, ECC fallback — so it remains the
 bit-exact oracle the batched backend is validated against, and the only
 backend that models damaged pages end to end.
+A queued LOOKUP executes as the paper's §V-A command pair — a key-page
+search followed by a gather of the first matching user slot's chunk on the
+paired value page — through the same chip model, so it is the bit-exact
+oracle for the batched backend's fused single-launch lookup path.
 """
 from __future__ import annotations
 
-from repro.core.commands import Command
+import numpy as np
+
+from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
+from repro.core.commands import Command, LookupResponse, Op
 from repro.core.engine import SimChipArray
+from repro.core.page import mask_header_slots
 
 from .base import MatchBackend, Ticket
 
@@ -29,6 +37,13 @@ class ScalarBackend(MatchBackend):
         self._queue.append(("gather", cmd, t))
         return t
 
+    def submit_lookup(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.LOOKUP or cmd.value_page is None:
+            raise ValueError(f"not a lookup command: {cmd}")
+        t = Ticket(self)
+        self._queue.append(("lookup", cmd, t))
+        return t
+
     @property
     def pending(self) -> int:
         return len(self._queue)
@@ -42,6 +57,24 @@ class ScalarBackend(MatchBackend):
             if kind == "search":
                 ticket._resolve(self.chips.search(cmd))
                 self.stats.searches += 1
+            elif kind == "lookup":
+                ticket._resolve(self._lookup(cmd))
+                self.stats.lookups += 1
             else:
                 ticket._resolve(self.chips.gather(cmd))
                 self.stats.gathers += 1
+
+    def _lookup(self, cmd: Command) -> LookupResponse:
+        resp = self.chips.search(Command(Op.SEARCH, cmd.page_addr,
+                                         query=cmd.query, mask=cmd.mask))
+        bitmap = mask_header_slots(resp.bitmap_words)
+        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+        if slots.size == 0:
+            return LookupResponse(search=resp, value_slot=None, value=None)
+        slot = int(slots[0])
+        g = self.chips.gather(Command.gather(cmd.value_page,
+                                             1 << (slot // SLOTS_PER_CHUNK)))
+        off = (slot % SLOTS_PER_CHUNK) * 8
+        return LookupResponse(search=resp, value_slot=slot,
+                              value=bytes(g.chunks[0][off:off + 8]),
+                              parity_ok=bool(g.parity_ok[0]))

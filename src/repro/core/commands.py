@@ -21,6 +21,7 @@ class Op(enum.Enum):
     PAGE_CLOSE = "page_close"
     SEARCH = "search"
     GATHER = "gather"
+    LOOKUP = "lookup"           # fused search + same-slot value gather
     READ_FULL = "read_full"     # storage-mode full-page read (baseline path)
     PROGRAM = "program"         # storage-mode page program
     ERASE = "erase"
@@ -35,6 +36,9 @@ class Command:
     mask: tuple[int, int] | None = None
     # gather operand: 64-bit chunk-select bitmap as (lo, hi)
     chunk_bitmap: tuple[int, int] | None = None
+    # lookup operand: the paired value page whose same-slot chunk is
+    # gathered after the key-page search (paper §V-A paired pages)
+    value_page: int | None = None
     # scheduling metadata
     submit_ns: int = 0
     deadline_ns: int = 0
@@ -50,6 +54,15 @@ class Command:
     def gather(page_addr: int, chunk_bitmap_u64: int, **kw) -> "Command":
         return Command(Op.GATHER, page_addr,
                        chunk_bitmap=u64_to_pair(chunk_bitmap_u64), **kw)
+
+    @staticmethod
+    def lookup(key_page: int, value_page: int, query_u64: int,
+               mask_u64: int = 0xFFFFFFFFFFFFFFFF, **kw) -> "Command":
+        """Fused point lookup: search ``key_page``, then gather the first
+        matching user slot's chunk from the paired ``value_page``."""
+        return Command(Op.LOOKUP, key_page, query=u64_to_pair(query_u64),
+                       mask=u64_to_pair(mask_u64), value_page=value_page,
+                       **kw)
 
     @staticmethod
     def page_open(page_addr: int, **kw) -> "Command":
@@ -80,6 +93,16 @@ class GatherResponse:
     chunks: np.ndarray              # (k, 64) uint8 de-randomized chunk bytes
     chunk_ids: np.ndarray           # (k,) int
     parity_ok: np.ndarray           # (k,) bool inner-code verdicts
+
+
+@dataclasses.dataclass
+class LookupResponse:
+    """Result of a fused key-search + value-gather point lookup."""
+    search: SearchResponse          # the key-page search, bit-identical to
+                                    # an explicit SEARCH command's response
+    value_slot: Optional[int]       # first matching user slot, None on miss
+    value: Optional[bytes]          # the slot's 8 value bytes, None on miss
+    parity_ok: bool = True          # inner-code verdict of the value chunk
 
 
 @dataclasses.dataclass

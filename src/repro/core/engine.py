@@ -74,10 +74,19 @@ class SimChip:
         self.ecc_cfg = ecc_cfg or EccConfig()
         self.pages: dict[int, StoredPage] = {}
         self.counters = ChipCounters()
+        # Write-path observers: called with the local page address whenever a
+        # stored image mutates (program, bit-error injection, ECC repair).
+        # Backends that mirror pages off-host (the device-resident plane
+        # store) subscribe here to invalidate exactly the dirty row.
+        self.observers: list = []
         # Latch pipeline state: addresses currently held in L1 / L2.
         self._l1_addr: int | None = None
         self._l2_addr: int | None = None
         self._rng = np.random.default_rng(device_seed ^ 0xD1CE)
+
+    def _notify(self, page_addr: int) -> None:
+        for fn in self.observers:
+            fn(page_addr)
 
     # ------------------------------------------------------------------ I/O
     def program_entries(self, page_addr: int, entries: np.ndarray, *,
@@ -93,6 +102,7 @@ class SimChip:
             timestamp_ns=timestamp_ns, n_entries=built.n_entries,
             clean_raw=built.raw.copy())
         self.counters.programs += 1
+        self._notify(page_addr)
         return built
 
     def inject_bit_errors(self, page_addr: int, n_bits: int,
@@ -114,6 +124,7 @@ class SimChip:
         np.bitwise_xor.at(sp.raw, bytes_idx,
                           (1 << bit_in_byte).astype(np.uint8))
         sp.injected_error_bits += int(n_bits)
+        self._notify(page_addr)
 
     # ------------------------------------------------------------ commands
     def page_open(self, page_addr: int, *, now_ns: int = 0):
@@ -234,6 +245,7 @@ class SimChip:
         assert sp.clean_raw is not None
         sp.raw = sp.clean_raw.copy()
         sp.injected_error_bits = 0
+        self._notify(page_addr)
         plain = self._derandomize_page(sp, page_addr)
         ok = ecc.crc32_chunks(plain) == sp.chunk_parities
         assert ok.all(), "repaired image fails inner parities — layout bug"
@@ -249,6 +261,23 @@ class SimChipArray:
         self.chips = [SimChip(pages_per_chip, device_seed=device_seed + i)
                       for i in range(n_chips)]
         self.pages_per_chip = pages_per_chip
+        # Array-level write observers, called with the *global* page address.
+        # Each chip's local notifications are translated back through the
+        # striping so subscribers (e.g. the device-resident plane store) see
+        # the same address space callers use.
+        self.observers: list = []
+        for idx, chip in enumerate(self.chips):
+            chip.observers.append(
+                lambda local, _i=idx: self._notify_global(
+                    local * len(self.chips) + _i))
+
+    def _notify_global(self, page_addr: int) -> None:
+        for fn in self.observers:
+            fn(page_addr)
+
+    def add_observer(self, fn) -> None:
+        """Subscribe to stored-image mutations (fn(global_page_addr))."""
+        self.observers.append(fn)
 
     def route(self, page_addr: int) -> tuple["SimChip", int]:
         return (self.chips[page_addr % len(self.chips)],

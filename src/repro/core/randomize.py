@@ -53,6 +53,29 @@ def chunk_stream_words(page_addr: int, chunk_idx: int, device_seed: int = 0,
     return xp.stack([lo, hi], axis=-1)
 
 
+def chunk_stream_words_batch(page_addrs, chunk_ids, device_seeds, xp=np):
+    """Streams for K (page, chunk, seed) triples at once: (K, 8, 2) uint32.
+
+    Vectorized form of ``chunk_stream_words`` — one call de-randomizes every
+    chunk of a whole gather/lookup burst instead of K per-chunk calls (the
+    host tail of the batched backend's flush).  ``device_seeds`` may be a
+    scalar (one chip) or a (K,) array (burst spanning chips).
+    """
+    pages = xp.asarray(page_addrs, dtype=xp.uint32)
+    chunks = xp.asarray(chunk_ids, dtype=xp.uint32)
+    seeds = xp.broadcast_to(xp.asarray(device_seeds).astype(xp.uint32),
+                            pages.shape)
+    chunk_addr = (pages * xp.uint32(CHUNKS_PER_PAGE) + chunks).astype(
+        xp.uint32)
+    slot_idx = xp.arange(SLOTS_PER_CHUNK, dtype=xp.uint32)
+    ctr = (chunk_addr[:, None] * xp.uint32(SLOTS_PER_CHUNK)
+           + slot_idx[None, :]).astype(xp.uint32)
+    ctr = ctr ^ seeds[:, None]
+    lo = mix2_32(ctr, _LO_SALT, xp)
+    hi = mix2_32(ctr, _HI_SALT, xp)
+    return xp.stack([lo, hi], axis=-1)
+
+
 def randomize_page_words(words, page_addr, device_seed: int = 0, xp=np):
     """XOR a page of (512, 2) slot words with its stream (involution)."""
     return xp.asarray(words, dtype=xp.uint32) ^ stream_words(

@@ -6,10 +6,12 @@ searched with `search` and fetched with `gather`.  A lookup therefore ships
 one 8-byte query down and gets 64 B of bitmap + 64 B of chunk back instead
 of two 4 KiB pages.
 
-All device traffic flows through a MatchBackend: point lookups issue
-immediate commands, while ``lookup_batch`` and ``range_query`` enqueue
-every search (and then every gather) before flushing, so a whole scan or
-burst executes as one batched launch on the kernel backend (§IV-E).
+All device traffic flows through a MatchBackend.  Point lookups use the
+fused LOOKUP primitive — key-page search, first-slot selection and
+value-page chunk gather in one command — so a ``lookup_batch`` burst is a
+single device launch on the kernel backend.  ``range_query`` enqueues every
+search (and then every gather) before flushing, so a whole scan executes as
+one batched launch per phase (§IV-E).
 
 The host-side B+Tree logic is deliberately ordinary; everything interesting
 happens in how little data crosses the bus.
@@ -91,65 +93,41 @@ class SimBTree:
         i = bisect.bisect_right(self._separators, int(key)) - 1
         return self.leaves[i] if i >= 0 else None
 
-    def _value_slot(self, bitmap_words) -> int | None:
-        """First matching user slot of a key-page bitmap, or None.
-
-        Key and value pages share the same entry layout, so the value sits
-        at the *same* slot index on the value page.
-        """
-        bitmap = mask_header_slots(bitmap_words)
-        slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
-        return int(slots[0]) if slots.size else None
-
-    @staticmethod
-    def _extract_value(gather_resp, value_slot: int) -> int:
-        off = (value_slot % SLOTS_PER_CHUNK) * 8
-        return int.from_bytes(bytes(gather_resp.chunks[0][off:off + 8]),
-                              "little")
-
     def lookup(self, key: int) -> int | None:
-        """Point query: search command on the key page, gather on the value
-        page (pipelined on-chip; we issue them back to back)."""
+        """Point query: fused search+gather on the leaf's paired pages
+        (pipelined on-chip, §III-B — one command, one launch)."""
         return self.lookup_batch([key])[0]
 
     def lookup_batch(self, keys) -> list[int | None]:
-        """Batched point queries: all searches in one flush, then all
-        gathers in one flush — two launches for the whole burst."""
+        """Batched point queries through ``submit_lookup``: the whole burst
+        is ONE fused launch on the kernel backend — the key-page match, the
+        first-slot selection and the value-page chunk gather never leave
+        the device."""
         leaves = [self._leaf_for(int(k)) for k in keys]
         tickets = []
         for k, leaf in zip(keys, leaves):
             if leaf is None:
                 tickets.append(None)
                 continue
-            tickets.append(self.backend.submit_search(
-                Command.search(leaf.key_page, int(k), FULL_MASK)))
+            tickets.append(self.backend.submit_lookup(
+                Command.lookup(leaf.key_page, leaf.value_page, int(k),
+                               FULL_MASK)))
             self.stats.searches += 1
             self.stats.bitmap_bytes += 64
         self.backend.flush()
 
-        value_slots: list[int | None] = []
-        gathers = []
-        for leaf, t in zip(leaves, tickets):
-            slot = self._value_slot(t.result().bitmap_words) \
-                if t is not None else None
-            value_slots.append(slot)
-            if slot is None:
-                gathers.append(None)
-                continue
-            cb = 1 << (slot // SLOTS_PER_CHUNK)
-            gathers.append(self.backend.submit_gather(
-                Command.gather(leaf.value_page, cb)))
-            self.stats.gathers += 1
-        self.backend.flush()
-
         out: list[int | None] = []
-        for slot, g in zip(value_slots, gathers):
-            if g is None:
+        for t in tickets:
+            if t is None:
                 out.append(None)
                 continue
-            resp = g.result()
-            self.stats.chunk_bytes += 64 * len(resp.chunk_ids)
-            out.append(self._extract_value(resp, slot))
+            resp = t.result()
+            if resp.value_slot is None:
+                out.append(None)
+                continue
+            self.stats.gathers += 1
+            self.stats.chunk_bytes += 64
+            out.append(int.from_bytes(resp.value, "little"))
         return out
 
     # --------------------------------------------------------------- range

@@ -1,36 +1,119 @@
-"""Public wrapper for the fused search+gather kernel."""
+"""Public wrappers for the fused search+gather kernels: layout, padding,
+fallback, and the single-query compatibility squeeze."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import default_interpret
-from .ref import sim_fused_ref
-from .sim_fused import sim_fused_kernel
+from .ref import sim_fused_ref, sim_lookup_ref
+from .sim_fused import sim_fused_kernel, sim_lookup_kernel
 
 
-def sim_fused(lo, hi, query, mask, *, max_out: int = 16,
+def _resolve_pages(n, page_base, device_seed, page_ids, page_seeds):
+    if page_ids is None:
+        page_ids = jnp.uint32(page_base) + jnp.arange(n, dtype=jnp.uint32)
+    if page_seeds is None:
+        page_seeds = jnp.full(n, device_seed & 0xFFFFFFFF, jnp.uint32)
+    return page_ids, page_seeds
+
+
+def sim_fused(lo, hi, queries, masks, *, max_out: int = 16,
               page_block: int = 16, page_base: int = 0,
               randomized: bool = False, device_seed: int = 0,
-              interpret: bool | None = None, use_kernel: bool = True):
-    """Fused single-query search+gather over page planes.
+              interpret: bool | None = None, use_kernel: bool = True,
+              page_ids=None, page_seeds=None):
+    """Fused multi-query search+gather over page planes.
 
-    Returns (slot_bitmap (N, 16), gathered (N, max_out, 16), counts (N,)).
+    queries/masks may be (2,) (single query — outputs lose the leading Q
+    axis, the historical API) or (Q, 2).  ``page_ids``/``page_seeds`` give
+    each staged page its own flash address and device seed, so one launch
+    batches pages from different chips (same scheme as ``sim_search``).
+
+    Returns (slot_bitmaps (Q, N, 16), gathered (Q, N, max_out, 16),
+    counts (Q, N)) — without the Q axis for a single 1-D query.
     """
+    queries = jnp.asarray(queries, jnp.uint32)
+    masks = jnp.asarray(masks, jnp.uint32)
+    single = queries.ndim == 1
+    queries = jnp.atleast_2d(queries)
+    masks = jnp.atleast_2d(masks)
     lo = jnp.asarray(lo, jnp.uint32)
     hi = jnp.asarray(hi, jnp.uint32)
     if not use_kernel:
-        return sim_fused_ref(lo, hi, query, mask, max_out=max_out,
-                             randomized=randomized, page_base=page_base,
-                             device_seed=device_seed)
+        bm, out, cnt = sim_fused_ref(
+            lo, hi, queries, masks, max_out=max_out, randomized=randomized,
+            page_base=page_base, device_seed=device_seed,
+            page_ids=page_ids, page_seeds=page_seeds)
+    else:
+        interpret = default_interpret() if interpret is None else interpret
+        n = lo.shape[0]
+        page_ids, page_seeds = _resolve_pages(n, page_base, device_seed,
+                                              page_ids, page_seeds)
+        pad = (-n) % page_block
+        if pad:
+            lo = jnp.pad(lo, ((0, pad), (0, 0)))
+            hi = jnp.pad(hi, ((0, pad), (0, 0)))
+            page_ids = jnp.pad(jnp.asarray(page_ids, jnp.uint32), (0, pad))
+            page_seeds = jnp.pad(jnp.asarray(page_seeds, jnp.uint32),
+                                 (0, pad))
+        bm, out, cnt = sim_fused_kernel(
+            lo, hi, queries, masks, page_ids, page_seeds,
+            page_block=page_block, max_out=max_out, randomized=randomized,
+            interpret=interpret)
+        bm, out, cnt = bm[:, :n], out[:, :n], cnt[:, :n]
+    if single:
+        return bm[0], out[0], cnt[0]
+    return bm, out, cnt
+
+
+def sim_fused_lookup(klo, khi, vlo, vhi, queries, masks, *,
+                     row_block: int = 8, randomized: bool = False,
+                     page_base: int = 0, device_seed: int = 0,
+                     interpret: bool | None = None, use_kernel: bool = True,
+                     key_ids=None, key_seeds=None):
+    """Paired lookup burst: search key row i, gather value row i — 1 launch.
+
+    Returns (bitmaps (B, 16), value_words (B, 16) — randomized as stored,
+    slots (B,) int32 with 512 meaning "no user slot matched").
+    """
+    klo = jnp.asarray(klo, jnp.uint32)
+    khi = jnp.asarray(khi, jnp.uint32)
+    vlo = jnp.asarray(vlo, jnp.uint32)
+    vhi = jnp.asarray(vhi, jnp.uint32)
+    queries = jnp.atleast_2d(jnp.asarray(queries, jnp.uint32))
+    masks = jnp.atleast_2d(jnp.asarray(masks, jnp.uint32))
+    if not use_kernel:
+        return sim_lookup_ref(klo, khi, vlo, vhi, queries, masks,
+                              randomized=randomized, page_base=page_base,
+                              device_seed=device_seed, key_ids=key_ids,
+                              key_seeds=key_seeds)
     interpret = default_interpret() if interpret is None else interpret
-    n = lo.shape[0]
-    pad = (-n) % page_block
+    b = klo.shape[0]
+    key_ids, key_seeds = _resolve_pages(b, page_base, device_seed,
+                                        key_ids, key_seeds)
+    pad = (-b) % row_block
     if pad:
-        lo = jnp.pad(lo, ((0, pad), (0, 0)))
-        hi = jnp.pad(hi, ((0, pad), (0, 0)))
-    bm, out, cnt = sim_fused_kernel(
-        lo, hi, jnp.asarray(query, jnp.uint32), jnp.asarray(mask, jnp.uint32),
-        page_base, page_block=page_block, max_out=max_out,
-        randomized=randomized, device_seed=device_seed, interpret=interpret)
-    return bm[:n], out[:n], cnt[:n, 0]
+        p2 = ((0, pad), (0, 0))
+        klo, khi = jnp.pad(klo, p2), jnp.pad(khi, p2)
+        vlo, vhi = jnp.pad(vlo, p2), jnp.pad(vhi, p2)
+        queries = jnp.pad(queries, p2)
+        masks = jnp.pad(masks, p2)
+        key_ids = jnp.pad(jnp.asarray(key_ids, jnp.uint32), (0, pad))
+        key_seeds = jnp.pad(jnp.asarray(key_seeds, jnp.uint32), (0, pad))
+    bm, val, slot = sim_lookup_kernel(
+        klo, khi, vlo, vhi, queries, masks, key_ids, key_seeds,
+        row_block=row_block, randomized=randomized, interpret=interpret)
+    return bm[:b], val[:b], slot[:b]
+
+
+def sim_fused_pages(pages_bytes: np.ndarray, queries_u64, masks_u64, **kw):
+    """Convenience: raw (N, 4096) uint8 pages + uint64 queries/masks."""
+    from repro.core.bits import u64_array_to_pairs
+    from repro.kernels.layout import pages_to_planes
+    lo, hi = pages_to_planes(pages_bytes)
+    q = u64_array_to_pairs(np.atleast_1d(np.asarray(queries_u64,
+                                                    dtype=np.uint64)))
+    m = u64_array_to_pairs(np.atleast_1d(np.asarray(masks_u64,
+                                                    dtype=np.uint64)))
+    return sim_fused(lo, hi, q, m, **kw)

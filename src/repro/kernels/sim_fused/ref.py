@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused search+gather kernel."""
+"""Pure-jnp oracles for the fused search+gather kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,36 +7,82 @@ from repro.core.bits import pack_bitmap
 from repro.kernels.layout import planes_to_chunk_words_xp
 from repro.kernels.sim_search.ref import stream_planes
 
+NO_SLOT = 512
 
-def sim_fused_ref(lo, hi, query, mask, *, max_out: int,
+
+def sim_fused_ref(lo, hi, queries, masks, *, max_out: int,
                   randomized: bool = False, page_base: int = 0,
-                  device_seed: int = 0):
-    """Single-query search -> chunk-select -> gather, one logical page pass.
+                  device_seed: int = 0, page_ids=None, page_seeds=None):
+    """Multi-query search -> chunk-select -> gather, one logical page pass.
 
-    lo, hi: (N, 512) uint32 planes;  query, mask: (2,) uint32
-    Returns (slot_bitmap (N, 16) uint32, gathered (N, max_out, 16) uint32,
-             counts (N,) int32) — counts are *chunk* counts.
+    lo, hi: (N, 512) uint32 planes;  queries, masks: (Q, 2) uint32
+    Returns (slot_bitmaps (Q, N, 16) uint32,
+             gathered (Q, N, max_out, 16) uint32,
+             counts (Q, N) int32) — counts are *chunk* counts.
     """
     lo = jnp.asarray(lo, jnp.uint32)
     hi = jnp.asarray(hi, jnp.uint32)
-    q = jnp.asarray(query, jnp.uint32)
-    m = jnp.asarray(mask, jnp.uint32)
+    q = jnp.atleast_2d(jnp.asarray(queries, jnp.uint32))
+    m = jnp.atleast_2d(jnp.asarray(masks, jnp.uint32))
     n = lo.shape[0]
     if randomized:
-        s_lo, s_hi = stream_planes(page_base, n, device_seed)
-        q_lo, q_hi = q[0] ^ s_lo, q[1] ^ s_hi
+        s_lo, s_hi = stream_planes(page_base, n, device_seed,
+                                   page_ids=page_ids, page_seeds=page_seeds)
+        q_lo = q[:, None, None, 0] ^ s_lo[None]        # (Q, N, 512)
+        q_hi = q[:, None, None, 1] ^ s_hi[None]
     else:
-        q_lo, q_hi = q[0], q[1]
-    mm = ((lo ^ q_lo) & m[0]) | ((hi ^ q_hi) & m[1])
-    bits = (mm == 0).astype(jnp.uint32)                    # (N, 512)
-    slot_bitmap = pack_bitmap(bits, xp=jnp)                # (N, 16)
+        q_lo = q[:, None, None, 0]
+        q_hi = q[:, None, None, 1]
+    mm = ((lo[None] ^ q_lo) & m[:, None, None, 0]) | (
+        (hi[None] ^ q_hi) & m[:, None, None, 1])
+    bits = (mm == 0).astype(jnp.uint32)                # (Q, N, 512)
+    slot_bitmap = pack_bitmap(bits, xp=jnp)            # (Q, N, 16)
 
-    chunk_bits = (bits.reshape(n, 64, 8).sum(axis=2) > 0).astype(jnp.uint32)
-    pos = jnp.cumsum(chunk_bits, axis=1, dtype=jnp.uint32) - chunk_bits
-    sel = ((pos[:, None, :] == jnp.arange(max_out,
-                                          dtype=jnp.uint32)[None, :, None])
-           & (chunk_bits[:, None, :] == 1)).astype(jnp.uint32)
-    chunks = planes_to_chunk_words_xp(lo, hi, jnp)         # (N, 64, 16)
-    gathered = jnp.einsum("nmj,njw->nmw", sel, chunks).astype(jnp.uint32)
-    counts = chunk_bits.sum(axis=1).astype(jnp.int32)
+    n_q = q.shape[0]
+    chunk_bits = (bits.reshape(n_q, n, 64, 8).sum(axis=3) > 0
+                  ).astype(jnp.uint32)                 # (Q, N, 64)
+    pos = jnp.cumsum(chunk_bits, axis=2, dtype=jnp.uint32) - chunk_bits
+    sel = ((pos[:, :, None, :]
+            == jnp.arange(max_out, dtype=jnp.uint32)[None, None, :, None])
+           & (chunk_bits[:, :, None, :] == 1)).astype(jnp.uint32)
+    chunks = planes_to_chunk_words_xp(lo, hi, jnp)     # (N, 64, 16)
+    gathered = jnp.einsum("qnmj,njw->qnmw", sel, chunks).astype(jnp.uint32)
+    counts = chunk_bits.sum(axis=2).astype(jnp.int32)
     return slot_bitmap, gathered, counts
+
+
+def sim_lookup_ref(klo, khi, vlo, vhi, queries, masks, *,
+                   randomized: bool = False, page_base: int = 0,
+                   device_seed: int = 0, key_ids=None, key_seeds=None):
+    """Paired lookup oracle: query i vs key row i, value gather from row i.
+
+    Returns (bitmaps (B, 16) uint32, value_words (B, 16) uint32,
+             slots (B,) int32 — first matching user slot, 512 if none).
+    """
+    klo = jnp.asarray(klo, jnp.uint32)
+    khi = jnp.asarray(khi, jnp.uint32)
+    q = jnp.asarray(queries, jnp.uint32)
+    m = jnp.asarray(masks, jnp.uint32)
+    b = klo.shape[0]
+    if randomized:
+        s_lo, s_hi = stream_planes(page_base, b, device_seed,
+                                   page_ids=key_ids, page_seeds=key_seeds)
+        q_lo = q[:, 0:1] ^ s_lo                        # (B, 512)
+        q_hi = q[:, 1:2] ^ s_hi
+    else:
+        q_lo, q_hi = q[:, 0:1], q[:, 1:2]
+    mm = ((klo ^ q_lo) & m[:, 0:1]) | ((khi ^ q_hi) & m[:, 1:2])
+    bits = (mm == 0).astype(jnp.uint32)                # (B, 512)
+    bitmap = pack_bitmap(bits, xp=jnp)                 # (B, 16)
+
+    slot = jnp.arange(512, dtype=jnp.uint32)[None, :]
+    user = jnp.where(slot >= 8, bits, jnp.uint32(0))
+    first = jnp.where(user == 1, slot, jnp.uint32(NO_SLOT)).min(axis=1)
+    found = first < NO_SLOT
+    chunk = jnp.minimum(first >> jnp.uint32(3), jnp.uint32(63))
+    sel = ((jnp.arange(64, dtype=jnp.uint32)[None, :] == chunk[:, None])
+           & found[:, None]).astype(jnp.uint32)        # (B, 64)
+    vchunks = planes_to_chunk_words_xp(jnp.asarray(vlo, jnp.uint32),
+                                       jnp.asarray(vhi, jnp.uint32), jnp)
+    value = jnp.einsum("bj,bjw->bw", sel, vchunks).astype(jnp.uint32)
+    return bitmap, value, first.astype(jnp.int32)

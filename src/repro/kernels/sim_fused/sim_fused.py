@@ -1,10 +1,23 @@
-"""Pallas TPU kernel: fused SiM search + gather (single query).
+"""Pallas TPU kernels: fused SiM search + gather.
 
 The paper notes a search is commonly followed immediately by a gather on the
 same page, and the chip pipelines them because the page already sits in the
 page buffers (§III-B, §V-A).  The TPU analogue is fusion: one VMEM residency
 of the page tile feeds both the match and the compaction matmul, halving HBM
 page reads for the search->gather pattern that dominates B+Tree lookups.
+
+Two kernels live here:
+
+  * ``sim_fused_kernel`` — the cross-product form: Q queries against N
+    pages, each (query, page) cell returning its packed bitmap plus the
+    matching chunks compacted from the *same* page.  Pages carry per-row
+    flash addresses and device seeds (same operand scheme as ``sim_search``)
+    so one launch batches pages from different chips.
+  * ``sim_lookup_kernel`` — the paired form the index/workload read burst
+    produces: row i matches query i against *key* page i, selects the first
+    matching user slot in-kernel (header chunk masked), and gathers the
+    slot's 64 B chunk from the paired *value* page i — search + slot select
+    + value gather in ONE launch, no bitmap round trip through the host.
 
 Gathered chunks come back *randomized* when the store is randomized (the
 gather bus payload is the raw latch content); the controller/host
@@ -25,96 +38,220 @@ SLOTS = 512
 CHUNKS = 64
 WORDS = 16
 BITMAP_WORDS = 16
+SLOTS_PER_CHUNK = 8
+NO_SLOT = SLOTS          # first-match sentinel: no user slot matched
 
 
-def _fused_kernel(lo_ref, hi_ref, q_ref, m_ref, base_ref, bm_ref, out_ref,
-                  cnt_ref, *, page_block: int, max_out: int,
-                  randomized: bool, device_seed: int):
-    lo = lo_ref[...]                                   # (PB, 512)
-    hi = hi_ref[...]
-    q = q_ref[...]                                     # (1, 2)
-    m = m_ref[...]
-    q_lo, q_hi = q[0, 0], q[0, 1]
-    m_lo, m_hi = m[0, 0], m[0, 1]
+def _match_bits(lo, hi, q_lo, q_hi, m_lo, m_hi, page, seed, *,
+                shape, randomized: bool):
+    """Masked XOR match with in-VMEM stream regeneration (§IV-C1).
 
+    ``page``/``seed`` are (PB, 1) uint32 per-page operands; the stream
+    counter for slot s of page p is ``(page[p] * 512 + s) ^ seed[p]`` —
+    identical to core/randomize.py, so one launch spans chips.
+    """
     if randomized:
-        tile = pl.program_id(0).astype(jnp.uint32)
-        page_in_tile = jax.lax.broadcasted_iota(jnp.uint32,
-                                                (page_block, SLOTS), 0)
-        slot = jax.lax.broadcasted_iota(jnp.uint32, (page_block, SLOTS), 1)
-        page = base_ref[0, 0] + tile * jnp.uint32(page_block) + page_in_tile
-        ctr = (page * jnp.uint32(SLOTS) + slot) ^ jnp.uint32(
-            device_seed & 0xFFFFFFFF)
+        slot = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+        ctr = (page * jnp.uint32(SLOTS) + slot) ^ seed
         q_lo = q_lo ^ mix2_32(ctr, _LO_SALT, jnp)
         q_hi = q_hi ^ mix2_32(ctr, _HI_SALT, jnp)
-
     mismatch = ((lo ^ q_lo) & m_lo) | ((hi ^ q_hi) & m_hi)
-    bits = (mismatch == 0).astype(jnp.uint32)          # (PB, 512)
+    return (mismatch == 0).astype(jnp.uint32)
+
+
+def _pack_bits(bits, lead_shape):
+    """(..., 512) {0,1} -> (..., 16) uint32 packed bitmap, in VMEM."""
+    b = bits.reshape(*lead_shape, BITMAP_WORDS, 32)
+    sh = jax.lax.broadcasted_iota(jnp.uint32, b.shape, b.ndim - 1)
+    return (b << sh).sum(axis=-1).astype(jnp.uint32)
+
+
+def _split16_select(sel_f32, lo, hi, page_block: int):
+    """One-hot chunk selection via the split-16 exact MXU matmul.
+
+    sel_f32: (PB, M, 64) or (PB, 64) one-hot rows; lo/hi: (PB, 512) planes.
+    Returns the selected chunk words, uint32, front-packed along M.
+    """
+    lo_c = lo.reshape(page_block, CHUNKS, SLOTS_PER_CHUNK)
+    hi_c = hi.reshape(page_block, CHUNKS, SLOTS_PER_CHUNK)
+    chunks = jnp.stack([lo_c, hi_c], axis=-1).reshape(
+        page_block, CHUNKS, WORDS)                 # interleaved words
+    c_lo = (chunks & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    c_hi = (chunks >> jnp.uint32(16)).astype(jnp.float32)
+    contract = sel_f32.ndim - 1
+    dn = (((contract,), (1,)), ((0,), (0,)))
+    g_lo = jax.lax.dot_general(sel_f32, c_lo, dn,
+                               preferred_element_type=jnp.float32)
+    g_hi = jax.lax.dot_general(sel_f32, c_hi, dn,
+                               preferred_element_type=jnp.float32)
+    return g_lo.astype(jnp.uint32) | (g_hi.astype(jnp.uint32)
+                                      << jnp.uint32(16))
+
+
+# ---------------------------------------------------------------------------
+# Cross-product fused kernel: Q queries x N pages, same-page chunk gather.
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(lo_ref, hi_ref, q_ref, m_ref, page_ref, seed_ref, bm_ref,
+                  out_ref, cnt_ref, *, page_block: int, max_out: int,
+                  randomized: bool):
+    lo = lo_ref[...]                                   # (PB, 512)
+    hi = hi_ref[...]
+    q = q_ref[...]                                     # (1, 2): query j
+    m = m_ref[...]
+    bits = _match_bits(lo, hi, q[0, 0], q[0, 1], m[0, 0], m[0, 1],
+                       page_ref[...], seed_ref[...],
+                       shape=(page_block, SLOTS), randomized=randomized)
 
     # --- search output: packed 64 B bitmap per page
-    b = bits.reshape(page_block, BITMAP_WORDS, 32)
-    sh = jax.lax.broadcasted_iota(jnp.uint32,
-                                  (page_block, BITMAP_WORDS, 32), 2)
-    bm_ref[...] = (b << sh).sum(axis=2).astype(jnp.uint32)
+    bm_ref[...] = _pack_bits(bits, (page_block,))[None]
 
     # --- gather phase, reusing the resident planes
-    chunk_bits = (bits.reshape(page_block, CHUNKS, 8).sum(axis=2)
-                  > 0).astype(jnp.uint32)              # (PB, 64)
+    chunk_bits = (bits.reshape(page_block, CHUNKS, SLOTS_PER_CHUNK
+                               ).sum(axis=2) > 0).astype(jnp.uint32)
     pos = jnp.cumsum(chunk_bits, axis=1, dtype=jnp.uint32) - chunk_bits
     m_ids = jax.lax.broadcasted_iota(jnp.uint32,
                                      (page_block, max_out, CHUNKS), 1)
     sel = ((pos[:, None, :] == m_ids) & (chunk_bits[:, None, :] == 1)
            ).astype(jnp.float32)
-
-    lo_c = lo.reshape(page_block, CHUNKS, 8)
-    hi_c = hi.reshape(page_block, CHUNKS, 8)
-    chunks = jnp.stack([lo_c, hi_c], axis=-1).reshape(
-        page_block, CHUNKS, WORDS)                     # interleaved words
-    c_lo = (chunks & jnp.uint32(0xFFFF)).astype(jnp.float32)
-    c_hi = (chunks >> jnp.uint32(16)).astype(jnp.float32)
-    dn = (((2,), (1,)), ((0,), (0,)))
-    g_lo = jax.lax.dot_general(sel, c_lo, dn,
-                               preferred_element_type=jnp.float32)
-    g_hi = jax.lax.dot_general(sel, c_hi, dn,
-                               preferred_element_type=jnp.float32)
-    out_ref[...] = (g_lo.astype(jnp.uint32)
-                    | (g_hi.astype(jnp.uint32) << jnp.uint32(16)))
-    cnt_ref[...] = chunk_bits.sum(axis=1, dtype=jnp.int32)[:, None]
+    out_ref[...] = _split16_select(sel, lo, hi, page_block)[None]
+    cnt_ref[...] = chunk_bits.sum(axis=1, dtype=jnp.int32)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("page_block", "max_out",
-                                             "randomized", "device_seed",
-                                             "interpret"))
-def sim_fused_kernel(lo, hi, query, mask, page_base, *, page_block: int = 16,
-                     max_out: int = 16, randomized: bool = False,
-                     device_seed: int = 0, interpret: bool = True):
+                                             "randomized", "interpret"))
+def sim_fused_kernel(lo, hi, queries, masks, page_ids, page_seeds, *,
+                     page_block: int = 16, max_out: int = 16,
+                     randomized: bool = False, interpret: bool = True):
+    """Fused multi-query search+gather.
+
+    lo, hi:      (N, 512) uint32 planes, N a multiple of ``page_block``
+    queries:     (Q, 2) uint32;  masks: (Q, 2) uint32
+    page_ids:    (N,) uint32 per-page flash addresses
+    page_seeds:  (N,) uint32 per-page device seeds
+    returns:     (bitmaps (Q, N, 16) uint32,
+                  gathered (Q, N, max_out, 16) uint32,
+                  counts (Q, N) int32)
+    """
     n = lo.shape[0]
-    assert n % page_block == 0
+    n_q = queries.shape[0]
+    assert n % page_block == 0, (n, page_block)
     kernel = functools.partial(_fused_kernel, page_block=page_block,
-                               max_out=max_out, randomized=randomized,
-                               device_seed=device_seed)
+                               max_out=max_out, randomized=randomized)
     return pl.pallas_call(
         kernel,
-        grid=(n // page_block,),
+        grid=(n // page_block, n_q),
         in_specs=[
-            pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
-            pl.BlockSpec((page_block, SLOTS), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((page_block, SLOTS), lambda i, j: (i, 0)),
+            pl.BlockSpec((page_block, SLOTS), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((page_block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((page_block, 1), lambda i, j: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((page_block, BITMAP_WORDS), lambda i: (i, 0)),
-            pl.BlockSpec((page_block, max_out, WORDS), lambda i: (i, 0, 0)),
-            pl.BlockSpec((page_block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, page_block, BITMAP_WORDS),
+                         lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1, page_block, max_out, WORDS),
+                         lambda i, j: (j, i, 0, 0)),
+            pl.BlockSpec((1, page_block), lambda i, j: (j, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, BITMAP_WORDS), jnp.uint32),
-            jax.ShapeDtypeStruct((n, max_out, WORDS), jnp.uint32),
-            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_q, n, BITMAP_WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((n_q, n, max_out, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((n_q, n), jnp.int32),
         ],
         interpret=interpret,
     )(jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32),
-      jnp.asarray(query, jnp.uint32).reshape(1, 2),
-      jnp.asarray(mask, jnp.uint32).reshape(1, 2),
-      jnp.asarray(page_base, jnp.uint32).reshape(1, 1))
+      jnp.asarray(queries, jnp.uint32), jnp.asarray(masks, jnp.uint32),
+      jnp.asarray(page_ids, jnp.uint32).reshape(-1, 1),
+      jnp.asarray(page_seeds, jnp.uint32).reshape(-1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Paired lookup kernel: query i -> key page i -> value page i, one launch.
+# ---------------------------------------------------------------------------
+
+def _lookup_kernel(klo_ref, khi_ref, vlo_ref, vhi_ref, q_ref, m_ref,
+                   kid_ref, kseed_ref, bm_ref, val_ref, slot_ref, *,
+                   row_block: int, randomized: bool):
+    klo = klo_ref[...]                                 # (RB, 512) key planes
+    khi = khi_ref[...]
+    q = q_ref[...]                                     # (RB, 2) per-row query
+    m = m_ref[...]
+    bits = _match_bits(klo, khi, q[:, 0:1], q[:, 1:2], m[:, 0:1], m[:, 1:2],
+                       kid_ref[...], kseed_ref[...],
+                       shape=(row_block, SLOTS), randomized=randomized)
+
+    # Raw packed bitmap (bit-identical to a search command's bus payload).
+    bm_ref[...] = _pack_bits(bits, (row_block,))
+
+    # First matching *user* slot: the header chunk (slots 0..7) never holds
+    # entries — index software strips it host-side; here the strip happens
+    # in-VMEM so the whole match->gather hop needs no host round trip.
+    slot = jax.lax.broadcasted_iota(jnp.uint32, (row_block, SLOTS), 1)
+    user = jnp.where(slot >= jnp.uint32(SLOTS_PER_CHUNK), bits,
+                     jnp.uint32(0))
+    first = jnp.where(user == 1, slot, jnp.uint32(NO_SLOT)).min(axis=1)
+    found = first < NO_SLOT                            # (RB,)
+    slot_ref[...] = first.astype(jnp.int32)[:, None]
+
+    # Gather the matched slot's chunk from the paired VALUE page row.
+    chunk = jnp.minimum(first >> jnp.uint32(3), jnp.uint32(CHUNKS - 1))
+    cidx = jax.lax.broadcasted_iota(jnp.uint32, (row_block, CHUNKS), 1)
+    sel = ((cidx == chunk[:, None]) & found[:, None]).astype(jnp.float32)
+    val_ref[...] = _split16_select(sel, vlo_ref[...], vhi_ref[...],
+                                   row_block)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "randomized",
+                                             "interpret"))
+def sim_lookup_kernel(klo, khi, vlo, vhi, queries, masks, key_ids, key_seeds,
+                      *, row_block: int = 8, randomized: bool = False,
+                      interpret: bool = True):
+    """Paired search->slot-select->value-gather, one launch for B lookups.
+
+    klo, khi:   (B, 512) uint32 key-page planes (row i serves lookup i)
+    vlo, vhi:   (B, 512) uint32 value-page planes, paired per row
+    queries:    (B, 2) uint32 per-row queries;  masks: (B, 2) uint32
+    key_ids:    (B,) uint32 key-page flash addresses (stream regeneration)
+    key_seeds:  (B,) uint32 key-page device seeds
+    returns:    (bitmaps (B, 16) uint32 — raw key-page match bitmaps,
+                 value_words (B, 16) uint32 — the matched slot's 64 B value
+                 chunk, randomized as stored,
+                 slots (B,) int32 — first matching user slot, 512 if none)
+    """
+    b = klo.shape[0]
+    assert b % row_block == 0, (b, row_block)
+    kernel = functools.partial(_lookup_kernel, row_block=row_block,
+                               randomized=randomized)
+    bm, val, slot = pl.pallas_call(
+        kernel,
+        grid=(b // row_block,),
+        in_specs=[
+            pl.BlockSpec((row_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, SLOTS), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((row_block, BITMAP_WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, BITMAP_WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((b, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(klo, jnp.uint32), jnp.asarray(khi, jnp.uint32),
+      jnp.asarray(vlo, jnp.uint32), jnp.asarray(vhi, jnp.uint32),
+      jnp.asarray(queries, jnp.uint32), jnp.asarray(masks, jnp.uint32),
+      jnp.asarray(key_ids, jnp.uint32).reshape(-1, 1),
+      jnp.asarray(key_seeds, jnp.uint32).reshape(-1, 1))
+    return bm, val, slot[:, 0]

@@ -9,10 +9,15 @@ Two executors live here:
                          no real data);
   * ``run_functional`` — the *functional* execution of the same op stream
                          against real programmed pages through a
-                         MatchBackend, batching read bursts so each burst
-                         is one search launch + one gather launch on the
-                         kernel backend (§IV-E).  Both backends must return
-                         identical read values (tests/test_backend_parity).
+                         MatchBackend, batching read bursts.  With
+                         ``fused=False`` each burst is one search launch +
+                         one gather launch on the kernel backend (§IV-E);
+                         with ``fused=True`` the burst goes through
+                         ``submit_lookup`` and resolves in ONE fused
+                         launch — match, slot select and value gather all
+                         on-device, the §III-B in-buffer pipelining.  All
+                         backend/mode combinations must return identical
+                         read values (tests/test_backend_parity).
 """
 from __future__ import annotations
 
@@ -60,20 +65,24 @@ class FunctionalRunResult:
     n_writes: int
     flushes: int              # backend flushes issued by the executor
     kernel_launches: int      # device launches (0 on the scalar backend)
+    staged_bytes: int = 0     # host->device page bytes (0 on scalar)
 
 
-def run_functional(workload: Workload, backend, *,
-                   burst: int = 64) -> FunctionalRunResult:
+def run_functional(workload: Workload, backend, *, burst: int = 64,
+                   fused: bool = False) -> FunctionalRunResult:
     """Execute the op stream against real pages through a MatchBackend.
 
     Key id ``k`` lives on key page ``k // 504`` at entry ``k % 504`` with
     stored key ``k + 1`` (nonzero, distinct from the vacant-slot sentinel);
     its value sits at the same entry of the §V-A paired value page.  Reads
-    accumulate into bursts of up to ``burst`` queries: the burst's searches
-    flush as one batch, then its value gathers as a second — so a YCSB read
-    burst is two kernel launches on the batched backend.  A write flushes
-    the open burst first (read-your-writes), updates the host mirror and
-    reprograms the value page through the backend.
+    accumulate into bursts of up to ``burst`` queries.  With
+    ``fused=False`` the burst's searches flush as one batch, then its value
+    gathers as a second — two kernel launches on the batched backend.  With
+    ``fused=True`` every read becomes a ``submit_lookup`` and the whole
+    burst resolves in one fused launch, no host bitmap decode in between.
+    A write flushes the open burst first (read-your-writes), updates the
+    host mirror and reprograms the value page through the backend — which
+    invalidates exactly that page's row in the device-resident plane store.
     """
     if workload.keys is None:
         raise ValueError("workload has no key stream "
@@ -97,7 +106,27 @@ def run_functional(workload: Workload, backend, *,
     flushes = 0
     pending: list[int] = []                 # op indices of queued reads
 
-    def resolve_burst() -> None:
+    def resolve_burst_fused() -> None:
+        """One submit_lookup per read: the whole burst is ONE launch."""
+        nonlocal flushes
+        if not pending:
+            return
+        lookups = [(qi, backend.submit_lookup(Command.lookup(
+            int(workload.key_pages[qi]), int(workload.value_pages[qi]),
+            int(stored_keys[workload.keys[qi]]), FULL_MASK)))
+            for qi in pending]
+        pending.clear()
+        backend.flush()
+        flushes += 1
+        for qi, t in lookups:
+            r = t.result()
+            if r.value_slot is None:
+                continue
+            out[qi] = int.from_bytes(r.value, "little")
+            hits[qi] = True
+
+    def resolve_burst_split() -> None:
+        """Search launch, host bitmap decode, then gather launch."""
         nonlocal flushes
         if not pending:
             return
@@ -128,6 +157,8 @@ def run_functional(workload: Workload, backend, *,
                 bytes(g.result().chunks[0][off:off + 8]), "little")
             hits[qi] = True
 
+    resolve_burst = resolve_burst_fused if fused else resolve_burst_split
+
     n_reads = n_writes = 0
     for qi in range(n):
         if workload.ops[qi] == 0:
@@ -148,7 +179,8 @@ def run_functional(workload: Workload, backend, *,
     return FunctionalRunResult(
         read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
         flushes=flushes,
-        kernel_launches=backend.stats.kernel_launches)
+        kernel_launches=backend.stats.kernel_launches,
+        staged_bytes=backend.stats.staged_bytes)
 
 
 def run(workload: Workload, *, params: FlashParams, system: str,

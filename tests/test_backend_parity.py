@@ -179,6 +179,126 @@ def test_hash_index_parity():
     assert results[0][0] == int(keys[0]) * 13
 
 
+def test_fused_lookup_parity_vs_scalar_split(backends):
+    """The fused single-launch lookup path must be bit-identical to the
+    scalar reference's split search+gather — bitmap, slot, value bytes and
+    inner-code verdict — including misses and multi-match pages."""
+    sb, bb, page_keys = backends
+    rng = np.random.default_rng(4)
+    cmds = []
+    for _ in range(24):
+        kp = int(rng.integers(0, N_PAGES // 2))
+        vp = kp + N_PAGES // 2
+        if rng.random() < 0.7:                      # planted hit
+            q = int(page_keys[kp][rng.integers(0, ENTRIES_PER_PAGE)])
+        else:                                       # miss
+            q = int(rng.integers(2**62, 2**63))
+        cmds.append(Command.lookup(kp, vp, q))
+
+    ts = [sb.submit_lookup(c) for c in cmds]
+    tb = [bb.submit_lookup(c) for c in cmds]
+    launches = bb.stats.kernel_launches
+    sb.flush()
+    bb.flush()
+    assert bb.stats.kernel_launches == launches + 1   # whole burst, 1 launch
+    saw_hit = saw_miss = False
+    for c, a, b in zip(cmds, ts, tb):
+        ra, rb = a.result(), b.result()
+        np.testing.assert_array_equal(ra.search.bitmap_words,
+                                      rb.search.bitmap_words)
+        assert ra.search.match_count == rb.search.match_count
+        assert ra.value_slot == rb.value_slot
+        assert ra.value == rb.value
+        assert ra.parity_ok == rb.parity_ok
+        saw_hit |= ra.value_slot is not None
+        saw_miss |= ra.value_slot is None
+    assert saw_hit and saw_miss
+
+    # The fused lookup must also agree with an explicit split decomposition.
+    c = cmds[0]
+    resp = bb.lookup(c)
+    s = bb.search(Command.search(c.page_addr, pair_to_u64(*c.query)))
+    np.testing.assert_array_equal(resp.search.bitmap_words, s.bitmap_words)
+    if resp.value_slot is not None:
+        g = bb.gather(Command.gather(
+            c.value_page, 1 << (resp.value_slot // 8)))
+        off = (resp.value_slot % 8) * 8
+        assert resp.value == bytes(g.chunks[0][off:off + 8])
+
+
+def test_planestore_invalidation_on_reprogram():
+    """program -> search -> reprogram same page -> search must reflect the
+    new image on both backends, and the batched backend must restage only
+    the dirty row (4 KiB), nothing else."""
+    rng = np.random.default_rng(9)
+    keys_a = rng.integers(1, 2**62, 100, dtype=np.uint64)
+    keys_b = rng.integers(1, 2**62, 100, dtype=np.uint64)
+    arrays = [SimChipArray(n_chips=3, pages_per_chip=8, device_seed=17)
+              for _ in range(2)]
+    backends_ = [ScalarBackend(arrays[0]), BatchedKernelBackend(arrays[1])]
+    for arr in arrays:
+        for p in range(6):
+            arr.program_entries(p, keys_a)
+
+    probe = Command.search(2, int(keys_b[7]))       # only in the NEW image
+    first = [be.search(probe) for be in backends_]
+    np.testing.assert_array_equal(first[0].bitmap_words,
+                                  first[1].bitmap_words)
+    assert first[0].match_count == 0
+
+    bb = backends_[1]
+    warm = bb.stats.staged_bytes
+    for arr in arrays:
+        arr.program_entries(2, keys_b)              # dirties one arena row
+    second = [be.search(probe) for be in backends_]
+    np.testing.assert_array_equal(second[0].bitmap_words,
+                                  second[1].bitmap_words)
+    assert second[0].match_count == 1
+    assert bb.stats.staged_bytes - warm == 4096     # exactly the dirty row
+
+    # ...and further searches of the (clean, resident) page restage nothing.
+    warm = bb.stats.staged_bytes
+    resp = bb.search(Command.search(2, int(keys_a[0])))   # old key: miss now
+    assert resp.match_count == 0
+    assert bb.stats.staged_bytes == warm
+
+
+def test_planestore_zero_restage_after_warmup(backends):
+    """Steady-state flushes of a warm working set ship zero page bytes —
+    only query operands cross host->device (the §III-B in-array analogue)."""
+    _, bb, page_keys = backends
+    cmds = [Command.search(p, int(page_keys[p][3])) for p in range(N_PAGES)]
+    for c in cmds:
+        bb.submit_search(c)
+    bb.flush()                                      # warm the arena
+    for _ in range(3):
+        before = bb.stats.staged_bytes
+        for c in cmds:
+            bb.submit_search(c)
+        bb.flush()
+        assert bb.stats.staged_bytes == before
+
+
+def test_ycsb_run_functional_fused_identical():
+    """Fused replay: bit-identical read values on every backend x mode, and
+    the fused burst is ONE kernel launch (vs 2 on the split path)."""
+    wl = generate(300, n_key_pages=6, read_ratio=0.8, alpha=0.5, seed=11)
+    outs = {}
+    for name, fused in (("scalar", False), ("scalar", True),
+                        ("batched", False), ("batched", True)):
+        arr = SimChipArray(n_chips=4, pages_per_chip=16, device_seed=3)
+        outs[(name, fused)] = run_functional(wl, make_backend(name, arr),
+                                             burst=32, fused=fused)
+    ref = outs[("scalar", False)]
+    for r in outs.values():
+        np.testing.assert_array_equal(ref.read_values, r.read_values)
+        np.testing.assert_array_equal(ref.read_hits, r.read_hits)
+    split, fused = outs[("batched", False)], outs[("batched", True)]
+    assert fused.kernel_launches == fused.flushes          # 1 launch/burst
+    assert split.kernel_launches == 2 * fused.kernel_launches
+    assert fused.staged_bytes > 0 and ref.staged_bytes == 0
+
+
 def test_ycsb_run_functional_identical():
     """Full workload replay: identical read values on both backends, and
     the batched backend actually batches (2 launches per read burst)."""

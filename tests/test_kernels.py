@@ -16,7 +16,7 @@ from repro.kernels.sim_search.ops import sim_search, sim_search_pages
 from repro.kernels.sim_search.ref import sim_search_ref
 from repro.kernels.sim_gather.ops import sim_gather
 from repro.kernels.sim_gather.ref import sim_gather_ref
-from repro.kernels.sim_fused.ops import sim_fused
+from repro.kernels.sim_fused.ops import sim_fused, sim_fused_lookup
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -165,6 +165,77 @@ def test_sim_fused_gathers_matching_chunk():
     cw = pages_to_chunk_words(pages)
     np.testing.assert_array_equal(np.asarray(g)[0, 0], cw[0, slot // 8])
     assert list(np.asarray(cnt)) == [1, 1, 1]
+
+
+@pytest.mark.parametrize("n_pages,n_queries", [(2, 1), (17, 3), (8, 4)])
+def test_sim_fused_multiquery_matches_ref(n_pages, n_queries):
+    """The generalized fused kernel: Q queries x N pages with per-page
+    flash addresses and device seeds, randomized stream in-kernel."""
+    lo, hi = _random_planes(n_pages, seed=n_pages + 90)
+    rng = np.random.default_rng(n_pages * 3 + n_queries)
+    q = rng.integers(0, 2**32, (n_queries, 2), dtype=np.uint64
+                     ).astype(np.uint32)
+    m = np.full((n_queries, 2), 0xFFFFFFFF, dtype=np.uint32)
+    ids = rng.integers(0, 4096, n_pages).astype(np.uint32)
+    seeds = rng.integers(0, 2**31, n_pages).astype(np.uint32)
+    got = sim_fused(lo, hi, q, m, max_out=4, page_block=8, randomized=True,
+                    page_ids=ids, page_seeds=seeds)
+    ref = sim_fused(lo, hi, q, m, max_out=4, use_kernel=False,
+                    randomized=True, page_ids=ids, page_seeds=seeds)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    assert np.asarray(got[0]).shape == (n_queries, n_pages, 16)
+    assert np.asarray(got[1]).shape == (n_queries, n_pages, 4, 16)
+
+
+@pytest.mark.parametrize("n_rows,row_block", [(3, 4), (8, 8), (13, 4)])
+def test_sim_fused_lookup_matches_ref(n_rows, row_block):
+    rng = np.random.default_rng(n_rows * 11 + row_block)
+    klo, khi = _random_planes(n_rows, seed=n_rows)
+    vlo, vhi = _random_planes(n_rows, seed=n_rows + 1)
+    # Half planted hits (copy a key-plane slot into the query), half misses.
+    q = rng.integers(0, 2**32, (n_rows, 2), dtype=np.uint64
+                     ).astype(np.uint32)
+    for i in range(0, n_rows, 2):
+        s = int(rng.integers(8, 512))
+        q[i] = [klo[i, s], khi[i, s]]
+    m = np.full((n_rows, 2), 0xFFFFFFFF, dtype=np.uint32)
+    ids = rng.integers(0, 4096, n_rows).astype(np.uint32)
+    seeds = rng.integers(0, 2**31, n_rows).astype(np.uint32)
+    for randomized in (False, True):
+        got = sim_fused_lookup(klo, khi, vlo, vhi, q, m,
+                               row_block=row_block, randomized=randomized,
+                               key_ids=ids, key_seeds=seeds)
+        ref = sim_fused_lookup(klo, khi, vlo, vhi, q, m, use_kernel=False,
+                               randomized=randomized, key_ids=ids,
+                               key_seeds=seeds)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_sim_fused_lookup_gathers_value_chunk():
+    """End-to-end semantics: the returned value words are the value page's
+    chunk holding the first matching user slot; slot 512 flags a miss."""
+    keys = np.arange(100, 604, dtype=np.uint64)
+    kpages = np.stack([build_page(keys + 504 * p, p, randomize=False).plain
+                       for p in range(3)])
+    vpages = np.stack([build_page(keys * 9 + p, p, randomize=False).plain
+                       for p in range(3)])
+    klo, khi = pages_to_planes(kpages)
+    vlo, vhi = pages_to_planes(vpages)
+    probe = [100 + 13, 504 + 100 + 250, 999_999]     # hit, hit, miss
+    q = u64_array_to_pairs(np.asarray(probe, dtype=np.uint64))
+    m = u64_array_to_pairs(np.array([FULL] * 3, dtype=np.uint64))
+    bm, val, slot = sim_fused_lookup(klo, khi, vlo, vhi, q, m, row_block=4)
+    slots = np.asarray(slot)
+    assert slots.tolist() == [8 + 13, 8 + 250, 512]
+    cw = pages_to_chunk_words(vpages)
+    np.testing.assert_array_equal(np.asarray(val)[0], cw[0, (8 + 13) // 8])
+    np.testing.assert_array_equal(np.asarray(val)[1], cw[1, (8 + 250) // 8])
+    assert (np.asarray(val)[2] == 0).all()
+    # the raw bitmap still reports every match, header slots included
+    bits = unpack_bitmap(np.asarray(bm), xp=np)
+    assert bits[0, 8 + 13] == 1 and bits[2].sum() == 0
 
 
 # -------------------------------------------------------- flash attention
