@@ -1,0 +1,121 @@
+"""Diff a fresh BENCH_*.json against its committed baseline; exit 1 on
+regression.
+
+CI runs this after benchmarks/kernel_micro.py so the perf trajectory is a
+*gate*, not just an uploaded artifact.  Three metric classes, picked by
+name, each with its own tolerance discipline:
+
+  * counter metrics (``*_bytes*``) — byte-traffic invariants of the
+    device-resident plane store (0 warm restage, 4096 per dirty row).
+    These are exact contracts: any drift fails.
+  * ratio metrics (``*speedup*``) — dimensionless A/B throughput ratios
+    measured in the same process, so machine speed cancels out.  They must
+    stay above both an absolute floor (the gates the benchmark itself
+    asserts, e.g. sharded 16-chip >= 2x) and ``RATIO_KEEP`` of baseline.
+  * timing metrics (everything else) — wall microseconds depend on the
+    machine, and the committed baseline was measured on a dev container,
+    not a GitHub runner: a gross slowdown (> ``TIMING_SLOWDOWN`` x
+    baseline) is printed as a WARNING but does not fail the build unless
+    ``BENCH_STRICT_TIMINGS=1`` (for same-machine A/B comparisons).  The
+    hard gates ride the machine-independent classes above.
+
+A metric present in the baseline but missing from the fresh run fails
+(coverage regression); new metrics are reported and pass — commit an
+updated baseline alongside the benchmark change that adds them.
+
+Usage:
+    python benchmarks/check_regression.py \
+        BENCH_kernel_micro.json benchmarks/BENCH_kernel_micro.baseline.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+TIMING_SLOWDOWN = 3.0      # machine-noise headroom for wall-clock metrics
+RATIO_KEEP = 0.5           # ratios may lose half their baseline margin...
+RATIO_FLOORS = {           # ...but never dip below the hard gates
+    "sharded_speedup_16chip": 2.0,
+    "sharded_speedup_4chip": 1.2,
+}
+
+
+def classify(name: str) -> str:
+    if "speedup" in name:
+        return "ratio"
+    if "_bytes" in name:
+        return "counter"
+    return "timing"
+
+
+def check(fresh: dict, baseline: dict) -> tuple[list[str], list[str]]:
+    """Returns (failures, timing_warnings)."""
+    fresh_by_name: dict[str, list[float]] = {}
+    for m in fresh["metrics"]:
+        fresh_by_name.setdefault(m["name"], []).append(float(m["value"]))
+    seen: dict[str, int] = {}
+    failures: list[str] = []
+    warnings: list[str] = []
+    for m in baseline["metrics"]:
+        name, base = m["name"], float(m["value"])
+        idx = seen.get(name, 0)
+        seen[name] = idx + 1
+        got = fresh_by_name.get(name, [])
+        if idx >= len(got):
+            failures.append(f"{name}[{idx}]: missing from fresh run "
+                            "(coverage regression)")
+            continue
+        val = got[idx]
+        kind = classify(name)
+        if kind == "counter":
+            if val != base:
+                failures.append(f"{name}[{idx}]: counter {val} != "
+                                f"baseline {base} (exact contract)")
+        elif kind == "ratio":
+            floor = max(RATIO_FLOORS.get(name, 0.0),
+                        base * RATIO_KEEP)
+            if val < floor:
+                failures.append(f"{name}[{idx}]: ratio {val:.2f} < "
+                                f"floor {floor:.2f} "
+                                f"(baseline {base:.2f})")
+        else:
+            if base > 0 and val > base * TIMING_SLOWDOWN:
+                warnings.append(f"{name}[{idx}]: {val:.1f}us > "
+                                f"{TIMING_SLOWDOWN}x baseline "
+                                f"{base:.1f}us")
+    extra = [n for n in fresh_by_name
+             if n not in {m["name"] for m in baseline["metrics"]}]
+    if extra:
+        print(f"new metrics (not in baseline, passing): {sorted(extra)}")
+    return failures, warnings
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        fresh = json.load(f)
+    with open(argv[2]) as f:
+        baseline = json.load(f)
+    failures, warnings = check(fresh, baseline)
+    if warnings and os.environ.get("BENCH_STRICT_TIMINGS") == "1":
+        failures += warnings
+        warnings = []
+    for line in warnings:
+        print(f"  WARN (timing, advisory on foreign hardware) {line}")
+    n = len(baseline["metrics"])
+    if failures:
+        print(f"PERF REGRESSION: {len(failures)} of {n} baseline metrics "
+              "failed")
+        for line in failures:
+            print(f"  FAIL {line}")
+        return 1
+    print(f"perf check OK: {n} baseline metrics within tolerance"
+          + (f" ({len(warnings)} timing warnings)" if warnings else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Timer, emit, write_bench_json
-from repro.backend import make_backend
+from repro.backend import ShardedSsdBackend, make_backend
 from repro.core.commands import Command
 from repro.core.engine import SimChipArray
 from repro.kernels.sim_search.ops import sim_search
@@ -173,6 +173,86 @@ def staged_bytes_per_flush(n_pages: int = 32, n_q: int = 16) -> None:
     assert backend.stats.staged_bytes - before == 4096
 
 
+def sharded_scaling(n_pages: int = 384, n_q: int = 384) -> None:
+    """ShardedSsdBackend throughput at 1 vs 4 vs 16 chips (§VI-A scaling).
+
+    The same point-query burst (one planted-key search per page) replays on
+    1x1, 4x1 and 4x4 geometries.  Sharding shrinks the stacked launch's
+    cross product — each chip's queries match only its own resident pages —
+    so the burst gets *faster* as the chip count grows even though every
+    geometry still issues ONE device dispatch.  The CI regression gate
+    (benchmarks/check_regression.py) holds the 16-chip speedup >= 2x; this
+    container shows ~5x.
+    """
+    rng = np.random.default_rng(0)
+    page_keys = [rng.integers(1, 2**62, 404, dtype=np.uint64)
+                 for _ in range(n_pages)]
+    qrng = np.random.default_rng(1)
+    probe = [int(page_keys[p][qrng.integers(0, 404)])
+             for p in range(n_pages)]
+    order = qrng.permutation(n_pages)[:n_q]
+    times, counts = {}, {}
+    for channels, dies in ((1, 1), (4, 1), (4, 4)):
+        be = ShardedSsdBackend.from_geometry(
+            channels=channels, dies_per_channel=dies,
+            pages_per_chip=n_pages, device_seed=5)
+        for p, keys in enumerate(page_keys):
+            be.program_entries(p, keys)
+        cmds = [Command.search(int(p), probe[int(p)]) for p in order]
+
+        def burst():
+            tickets = [be.submit_search(c) for c in cmds]
+            be.flush()
+            return [t.result().match_count for t in tickets]
+
+        n_chips = channels * dies
+        counts[n_chips] = burst()           # warm arena + compile
+        burst()
+        launches = be.stats.kernel_launches
+        with Timer() as t:
+            burst()
+            burst()
+        assert be.stats.kernel_launches == launches + 2, \
+            "sharded burst must be one device dispatch, not one per chip"
+        times[n_chips] = t.elapsed_us / 2
+        emit(f"sharded_search_{n_chips}chip", times[n_chips] / n_q,
+             f"q={n_q}_pages={n_pages}_geometry={channels}x{dies}"
+             f"_one_stacked_launch")
+    assert counts[1] == counts[4] == counts[16], \
+        "sharded geometries diverged"
+    speed4 = times[1] / times[4]
+    speed16 = times[1] / times[16]
+    # Regression gate: chip parallelism must keep paying off at 16 chips.
+    assert speed16 >= 2.0, \
+        f"sharded 16-chip speedup {speed16:.1f}x < 2x gate"
+    emit("sharded_speedup_4chip", speed4,
+         f"burst_time_1chip_over_4chip_q={n_q}")
+    emit("sharded_speedup_16chip", speed16,
+         f"burst_time_1chip_over_16chip_q={n_q}_ci_gate>=2x")
+
+
+def functional_sharded_timeline(n_queries: int = 256,
+                                n_key_pages: int = 8) -> None:
+    """run_functional on a 4x4 sharded backend with timeline coupling:
+    emits the simulated per-burst latency distribution (fig14/15-style)
+    and energy from the *functional* replay."""
+    wl = generate(n_queries, n_key_pages=n_key_pages, read_ratio=0.9,
+                  alpha=0.5, seed=9)
+    be = ShardedSsdBackend.from_geometry(
+        channels=4, dies_per_channel=4,
+        pages_per_chip=max(wl.n_index_pages // 16 + 1, 8),
+        device_seed=3, timeline=True)
+    r = run_functional(wl, be, burst=64, fused=True)
+    assert r.burst_latencies_ns is not None and r.sim_energy_pj > 0
+    p = np.percentile(r.burst_latencies_ns, (50, 99))
+    emit("sharded_functional_p50_us", p[0] / 1e3,
+         "simulated_burst_latency_median_4x4_fused")
+    emit("sharded_functional_p99_us", p[1] / 1e3,
+         "simulated_burst_latency_tail_4x4_fused")
+    emit("sharded_functional_energy_uj", r.sim_energy_pj / 1e6,
+         f"simulated_chip_energy_q={n_queries}")
+
+
 def main(scale: int = 1) -> None:
     rng = np.random.default_rng(0)
     n_pages, n_q = 64, 8
@@ -223,6 +303,8 @@ def main(scale: int = 1) -> None:
     backend_batch_comparison()
     functional_burst_comparison()
     staged_bytes_per_flush()
+    sharded_scaling()
+    functional_sharded_timeline()
     write_bench_json("kernel_micro")
 
 

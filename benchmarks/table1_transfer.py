@@ -31,7 +31,6 @@ def main() -> None:
     io_ratio = r["baseline"]["io_bytes"] / r["sim"]["io_bytes"]
     cur_ratio = r["baseline"]["current_ma"] / r["sim"]["current_ma"]
     e_ratio = r["baseline"]["energy_nj"] / r["sim"]["energy_nj"]
-    lat_ratio = r["baseline"]["latency_us"] / r["sim"]["latency_us"]
     emit("table1_io_ratio", t.elapsed_us, f"{io_ratio:.0f}x_less_io")
     emit("table1_current_ratio", t.elapsed_us,
          f"{cur_ratio:.1f}x_peak_current(paper_13x)")

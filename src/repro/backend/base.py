@@ -27,9 +27,17 @@ the §V-A paired-page pattern) that a YCSB read burst or a B+Tree
 ``lookup_batch`` resolves in ONE device launch instead of a search launch,
 a Python bitmap decode, and a gather launch.
 
-Future backends the ROADMAP names (sharded, async, multi-chip) implement
-the same four methods: ``submit_search``, ``submit_gather``,
-``submit_lookup``, ``flush``.
+A third implementation, ``ShardedSsdBackend`` (sharded.py), scales the
+same contract to a whole SSD: ``channels x dies_per_channel`` chips, each
+with its own plane-store arena and pending queue, drained in ONE stacked
+launch per burst (vmap over the chip axis) with optional coupling to the
+flash/ssd.py resource timelines for per-burst latency/energy accounting.
+The scalar and batched backends are its degenerate 1x1 cases and its
+bit-exactness references.
+
+Future backends the ROADMAP names (async, replicated) implement the same
+four methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
+``flush``.
 """
 from __future__ import annotations
 
@@ -148,10 +156,13 @@ def as_backend(chips_or_backend) -> MatchBackend:
 
 
 def make_backend(name: str, chips: SimChipArray, **kw) -> MatchBackend:
-    """Factory: ``scalar`` (reference) or ``batched`` (Pallas fast path)."""
+    """Factory: ``scalar`` (reference), ``batched`` (single-arena Pallas
+    fast path) or ``sharded`` (channels x dies multi-chip SSD)."""
     from .batched import BatchedKernelBackend
     from .scalar import ScalarBackend
-    backends = {"scalar": ScalarBackend, "batched": BatchedKernelBackend}
+    from .sharded import ShardedSsdBackend
+    backends = {"scalar": ScalarBackend, "batched": BatchedKernelBackend,
+                "sharded": ShardedSsdBackend}
     if name not in backends:
         raise ValueError(f"unknown backend {name!r}; pick from "
                          f"{sorted(backends)}")

@@ -63,6 +63,131 @@ from .base import MatchBackend, Ticket
 from .planestore import PlaneStore, next_pow2, padded_rows
 
 
+# ---------------------------------------------------------------------------
+# Host-tail resolvers, shared by every kernel-launching backend (batched's
+# single-chip launches and sharded's stacked multi-chip launches): given the
+# launch outputs as numpy arrays, de-randomize / verify on the controller
+# side, bump the owning chips' functional counters and resolve the tickets.
+# ---------------------------------------------------------------------------
+
+def resolve_search_responses(chips, searches, placements, out) -> None:
+    """Resolve search tickets from launch output rows.
+
+    ``placements[i]`` is the index tuple of command i's bitmap in ``out``
+    (e.g. ``(qi, pi)`` for a single-chip launch, ``(ci, qi, pi)`` for a
+    chip-stacked one).
+    """
+    for (cmd, ticket), idx in zip(searches, placements):
+        bitmap = np.asarray(out[idx]).copy()
+        chip, _ = chips.route(cmd.page_addr)
+        chip.counters.searches += 1
+        ticket._resolve(SearchResponse(
+            bitmap_words=bitmap,
+            match_count=int(popcount_words(bitmap).sum()),
+            open_verdict=OpenVerdict.CLEAN.value))
+
+
+def resolve_lookup_responses(chips, lookups, bm, val, slots) -> None:
+    """Fused-lookup host tail: batched de-randomize + inner-code verify of
+    every hit's value chunk, then ticket resolution.
+
+    ``bm`` (n, 16), ``val`` (n, 16), ``slots`` (n,) are the launch outputs
+    trimmed to the burst length.
+    """
+    n = len(lookups)
+    key_addrs = [cmd.page_addr for cmd, _ in lookups]
+    val_addrs = [cmd.value_page for cmd, _ in lookups]
+    counts = popcount_words(bm)                # (n,) per-row match totals
+
+    for a in set(key_addrs):
+        chip, _ = chips.route(a)
+        chip.counters.array_reads += 1
+
+    hit = slots < NO_SLOT
+    hit_idx = np.nonzero(hit)[0]
+    values = [None] * n
+    parity = np.ones(n, dtype=bool)
+    if hit_idx.size:
+        v_locals, v_seeds, parities = [], [], []
+        chunks = slots[hit_idx] // SLOTS_PER_CHUNK
+        for i, c in zip(hit_idx, chunks):
+            chip, local = chips.route(val_addrs[int(i)])
+            v_locals.append(local)
+            v_seeds.append(chip.device_seed & 0xFFFFFFFF)
+            parities.append(chip.pages[local].chunk_parities[int(c)])
+            chip.counters.array_reads += 1
+            chip.counters.gathers += 1
+            chip.counters.chunks_gathered += 1
+        streams = chunk_stream_words_batch(v_locals, chunks, v_seeds)
+        words = val[hit_idx].reshape(-1, SLOTS_PER_CHUNK, 2)
+        plain = slot_words_to_bytes(words ^ streams)       # (K, 64) bytes
+        parity[hit_idx] = (ecc.crc32_rows(plain)
+                           == np.asarray(parities, np.uint32))
+        offs = (slots[hit_idx] % SLOTS_PER_CHUNK) * 8
+        for j, i in enumerate(hit_idx):
+            values[int(i)] = bytes(plain[j, offs[j]:offs[j] + 8])
+
+    for i, (cmd, ticket) in enumerate(lookups):
+        chip, _ = chips.route(cmd.page_addr)
+        chip.counters.searches += 1
+        resp = SearchResponse(bitmap_words=bm[i].copy(),
+                              match_count=int(counts[i]),
+                              open_verdict=OpenVerdict.CLEAN.value)
+        ticket._resolve(LookupResponse(
+            search=resp,
+            value_slot=int(slots[i]) if hit[i] else None,
+            value=values[i], parity_ok=bool(parity[i])))
+
+
+def resolve_gather_responses(chips, gathers, out) -> int:
+    """Gather host tail: one stream regeneration + one CRC pass for every
+    selected chunk of the whole burst.  Returns total chunks gathered."""
+    owners, all_locals, all_chunks, all_seeds, all_parities = \
+        [], [], [], [], []
+    chunk_ids_per = []
+    for cmd, _ in gathers:
+        chip, local = chips.route(cmd.page_addr)
+        owners.append((chip, local))
+        bits = unpack_bitmap(np.asarray(cmd.chunk_bitmap, np.uint32),
+                             n_bits=CHUNKS_PER_PAGE)
+        chunk_ids = np.nonzero(bits)[0]
+        chunk_ids_per.append(chunk_ids)
+        all_locals.extend([local] * chunk_ids.size)
+        all_chunks.extend(chunk_ids.tolist())
+        all_seeds.extend([chip.device_seed & 0xFFFFFFFF]
+                         * chunk_ids.size)
+        all_parities.append(chip.pages[local].chunk_parities[chunk_ids])
+
+    k_total = len(all_chunks)
+    if k_total:
+        words = np.concatenate([
+            out[r, :ids.size] for r, ids in enumerate(chunk_ids_per)
+            if ids.size]).reshape(k_total, SLOTS_PER_CHUNK, 2)
+        streams = chunk_stream_words_batch(all_locals, all_chunks,
+                                           all_seeds)
+        plain_all = slot_words_to_bytes(words ^ streams)
+        parity_all = (ecc.crc32_rows(plain_all)
+                      == np.concatenate(all_parities))
+    else:
+        plain_all = np.zeros((0, CHUNK_BYTES), dtype=np.uint8)
+        parity_all = np.zeros(0, dtype=bool)
+
+    pos = 0
+    for r, (cmd, ticket) in enumerate(gathers):
+        chip, local = owners[r]
+        chunk_ids = chunk_ids_per[r]
+        k = int(chunk_ids.size)
+        plain = plain_all[pos:pos + k]
+        parity_ok = parity_all[pos:pos + k]
+        pos += k
+        chip.counters.array_reads += 1
+        chip.counters.gathers += 1
+        chip.counters.chunks_gathered += k
+        ticket._resolve(GatherResponse(chunks=plain, chunk_ids=chunk_ids,
+                                       parity_ok=parity_ok))
+    return k_total
+
+
 class BatchedKernelBackend(MatchBackend):
     def __init__(self, chips: SimChipArray, *, page_block: int = 32,
                  lookup_block: int = 8, use_kernel: bool = True,
@@ -165,14 +290,7 @@ class BatchedKernelBackend(MatchBackend):
         if len(searches) > 1:
             self.stats.batched_searches += len(searches)
 
-        for (cmd, ticket), (qi, pi) in zip(searches, placements):
-            bitmap = out[qi, pi].copy()
-            chip, _ = self.chips.route(cmd.page_addr)
-            chip.counters.searches += 1
-            ticket._resolve(SearchResponse(
-                bitmap_words=bitmap,
-                match_count=int(popcount_words(bitmap).sum()),
-                open_verdict=OpenVerdict.CLEAN.value))
+        resolve_search_responses(self.chips, searches, placements, out)
 
     # -------------------------------------------------------------- lookups
     def _flush_lookups(self, lookups) -> None:
@@ -203,48 +321,7 @@ class BatchedKernelBackend(MatchBackend):
         self.stats.lookups += n
         self.stats.staged_pages += len(set(key_addrs) | set(val_addrs))
         self.stats.staged_queries += n
-        counts = popcount_words(bm)            # (n,) per-row match totals
-
-        for a in set(key_addrs):
-            chip, _ = self.chips.route(a)
-            chip.counters.array_reads += 1
-
-        # Batched host tail: de-randomize + inner-code-verify every hit's
-        # value chunk in one vectorized pass (controller side).
-        hit = slots < NO_SLOT
-        hit_idx = np.nonzero(hit)[0]
-        values = [None] * n
-        parity = np.ones(n, dtype=bool)
-        if hit_idx.size:
-            v_locals, v_seeds, parities = [], [], []
-            chunks = slots[hit_idx] // SLOTS_PER_CHUNK
-            for i, c in zip(hit_idx, chunks):
-                chip, local = self.chips.route(val_addrs[int(i)])
-                v_locals.append(local)
-                v_seeds.append(chip.device_seed & 0xFFFFFFFF)
-                parities.append(chip.pages[local].chunk_parities[int(c)])
-                chip.counters.array_reads += 1
-                chip.counters.gathers += 1
-                chip.counters.chunks_gathered += 1
-            streams = chunk_stream_words_batch(v_locals, chunks, v_seeds)
-            words = val[hit_idx].reshape(-1, SLOTS_PER_CHUNK, 2)
-            plain = slot_words_to_bytes(words ^ streams)   # (K, 64) bytes
-            parity[hit_idx] = (ecc.crc32_rows(plain)
-                               == np.asarray(parities, np.uint32))
-            offs = (slots[hit_idx] % SLOTS_PER_CHUNK) * 8
-            for j, i in enumerate(hit_idx):
-                values[int(i)] = bytes(plain[j, offs[j]:offs[j] + 8])
-
-        for i, (cmd, ticket) in enumerate(lookups):
-            chip, _ = self.chips.route(cmd.page_addr)
-            chip.counters.searches += 1
-            resp = SearchResponse(bitmap_words=bm[i].copy(),
-                                  match_count=int(counts[i]),
-                                  open_verdict=OpenVerdict.CLEAN.value)
-            ticket._resolve(LookupResponse(
-                search=resp,
-                value_slot=int(slots[i]) if hit[i] else None,
-                value=values[i], parity_ok=bool(parity[i])))
+        resolve_lookup_responses(self.chips, lookups, bm, val, slots)
 
     # -------------------------------------------------------------- gathers
     def _flush_gathers(self, gathers) -> None:
@@ -265,49 +342,4 @@ class BatchedKernelBackend(MatchBackend):
         out = np.asarray(out)[:n]              # (R, 64, 16) uint32
         self.stats.kernel_launches += 1
         self.stats.gathers += n
-
-        # Batched host tail: one stream regeneration + one CRC pass for
-        # every selected chunk of the whole burst.
-        owners, all_locals, all_chunks, all_seeds, all_parities = \
-            [], [], [], [], []
-        chunk_ids_per = []
-        for cmd, _ in gathers:
-            chip, local = self.chips.route(cmd.page_addr)
-            owners.append((chip, local))
-            bits = unpack_bitmap(np.asarray(cmd.chunk_bitmap, np.uint32),
-                                 n_bits=CHUNKS_PER_PAGE)
-            chunk_ids = np.nonzero(bits)[0]
-            chunk_ids_per.append(chunk_ids)
-            all_locals.extend([local] * chunk_ids.size)
-            all_chunks.extend(chunk_ids.tolist())
-            all_seeds.extend([chip.device_seed & 0xFFFFFFFF]
-                             * chunk_ids.size)
-            all_parities.append(chip.pages[local].chunk_parities[chunk_ids])
-
-        k_total = len(all_chunks)
-        if k_total:
-            words = np.concatenate([
-                out[r, :ids.size] for r, ids in enumerate(chunk_ids_per)
-                if ids.size]).reshape(k_total, SLOTS_PER_CHUNK, 2)
-            streams = chunk_stream_words_batch(all_locals, all_chunks,
-                                               all_seeds)
-            plain_all = slot_words_to_bytes(words ^ streams)
-            parity_all = (ecc.crc32_rows(plain_all)
-                          == np.concatenate(all_parities))
-        else:
-            plain_all = np.zeros((0, CHUNK_BYTES), dtype=np.uint8)
-            parity_all = np.zeros(0, dtype=bool)
-
-        pos = 0
-        for r, (cmd, ticket) in enumerate(gathers):
-            chip, local = owners[r]
-            chunk_ids = chunk_ids_per[r]
-            k = int(chunk_ids.size)
-            plain = plain_all[pos:pos + k]
-            parity_ok = parity_all[pos:pos + k]
-            pos += k
-            chip.counters.array_reads += 1
-            chip.counters.gathers += 1
-            chip.counters.chunks_gathered += k
-            ticket._resolve(GatherResponse(chunks=plain, chunk_ids=chunk_ids,
-                                           parity_ok=parity_ok))
+        resolve_gather_responses(self.chips, gathers, out)

@@ -55,9 +55,11 @@ def padded_rows(n: int, block: int) -> int:
 class PlaneStore:
     """Arena of device-resident page planes, invalidated by the write path."""
 
-    def __init__(self, chips: SimChipArray, *, block: int = 32):
+    def __init__(self, chips: SimChipArray, *, block: int = 32,
+                 log_staging: bool = False):
         self.chips = chips
         self.block = block
+        self.log_staging = log_staging
         self._row: dict[int, int] = {}      # global page addr -> arena row
         self._addrs: list[int] = []         # arena row -> global page addr
         self._dirty: set[int] = set()
@@ -66,6 +68,13 @@ class PlaneStore:
         self._ids = self._seeds = None      # (cap, 1) uint32
         self.staged_rows = 0                # rows shipped host->device, ever
         self.staged_bytes = 0               # page-plane bytes shipped, ever
+        # With ``log_staging``: addresses whose *dirty* planes restaged
+        # since the log was last drained — the sharded backend groups
+        # these per chip to charge write-back bytes on the right
+        # channel-bus timeline (see flash/timeline.py).  Cold first-touch
+        # staging is deliberately not logged, and the log is off by
+        # default so backends that never drain it don't accumulate it.
+        self.staged_log: list[int] = []
         # Subscribe through a weakref so an abandoned store (and its device
         # arena) stays collectable — the chip array outlives backends.
         ref = weakref.ref(self)
@@ -110,6 +119,7 @@ class PlaneStore:
         """
         rows = np.empty(len(page_addrs), np.int32)
         stage: list[int] = []
+        dirty_staged: list[int] = []
         queued = set()
         for i, a in enumerate(page_addrs):
             a = int(a)
@@ -125,12 +135,18 @@ class PlaneStore:
                     queued.add(a)
             elif a in self._dirty and a not in queued:
                 stage.append(a)
+                dirty_staged.append(a)
                 queued.add(a)
             rows[i] = r
         if len(self._addrs) > self._cap:
             self._grow(len(self._addrs))
         if stage:
             self._stage(stage)
+            if self.log_staging:
+                # Only *dirty* restages enter the log: cold first-touch
+                # staging is arena population (a TPU-residency artifact),
+                # not write-caused channel traffic (see flash/timeline.py).
+                self.staged_log.extend(dirty_staged)
         return rows
 
     def _stage(self, addrs: list[int]) -> None:
@@ -164,5 +180,17 @@ class PlaneStore:
         r = np.zeros(pad_to, np.int32)
         r[:len(rows)] = rows
         ridx = jnp.asarray(r)
+        return (self._lo[ridx], self._hi[ridx],
+                self._ids[ridx, 0], self._seeds[ridx, 0])
+
+    def take2d(self, rows: np.ndarray):
+        """Row gather for a (C, R) index matrix, in four device ops total.
+
+        Returns (lo (C, R, 512), hi (C, R, 512), ids (C, R), seeds (C, R)).
+        This is how the sharded backend stacks every chip's operand rows
+        for its single vmapped launch without a per-chip gather+stack
+        cascade (device dispatch on the interpret path is the bottleneck).
+        """
+        ridx = jnp.asarray(np.asarray(rows, np.int32))
         return (self._lo[ridx], self._hi[ridx],
                 self._ids[ridx, 0], self._seeds[ridx, 0])

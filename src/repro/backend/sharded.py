@@ -1,0 +1,376 @@
+"""Sharded multi-chip SSD backend: channels x dies chips, one launch/burst.
+
+The scalar and batched backends drive what is effectively ONE chip's worth
+of device state; only the analytic timeline model (flash/ssd.py) knew the
+SSD has more than one die.  This backend is the refactor that turns "a chip
+model with fast kernels" into "an SSD": it owns ``channels x dies_per_channel``
+chips behind the same four-method ``MatchBackend`` contract and exploits
+their parallelism the way the paper's controller does (§VI-A, TCAM-SSD's
+channel-level framework).
+
+Address space.  A global page address stripes across chips exactly like
+``SimChipArray.route`` — ``chip = addr % n_chips``, ``local = addr // n_chips``
+(:func:`decompose` / :func:`compose`) — so stored images, and therefore
+every response, are bit-identical to the scalar/batched references over the
+same array.  The single-chip backends are the degenerate 1x1 case.
+
+Per-chip state.  Every chip gets its own pending command queue and its own
+plane-arena namespace — per-chip row maps, dirty tracking and staged-byte
+accounting — carved out of ONE block-aligned backing ``PlaneStore``
+allocation, so that draining all chips stages with a single (chips, rows)
+device gather instead of a per-chip gather+stack cascade (device dispatch,
+not compute, dominates the interpret path).  ``flush()`` drains every chip
+in a single device dispatch per phase:
+
+  * searches — each chip's unique local pages and unique (query, mask)
+    rows pad to the common pow2-of-block geometry and stack into
+    (chips, rows, ...) operands for ONE ``jax.vmap``-ed ``sim_search``
+    launch over the chip axis.  Sharding also shrinks the work: a chip's
+    queries match only its own resident pages, so the cross product is
+    ~1/chips of the single-arena launch — the kernel analogue of
+    per-channel match engines, and where the >= 2x-at-16-chips throughput
+    gate in benchmarks/kernel_micro.py comes from.
+  * lookups — the paired ``sim_fused_lookup`` kernel is row-parallel
+    (row i searches key page i, gathers value page i), so rows from every
+    chip ride one row-stacked launch; the key and value page of one lookup
+    may live on different chips (the §V-A cross-die pairing).
+  * gathers — same row stacking through one ``sim_gather`` launch.
+
+Timeline coupling.  Pass ``timeline=`` (or ``timeline=True``) to attach a
+``flash.timeline.BurstTimeline``: every flush reports per-chip batch sizes
+and restaged bytes as ``ChipBurst`` records, which the adapter replays on
+flash/ssd.py's die/channel/PCIe timelines — ``run_functional`` then returns
+measured-bit-exact results plus a simulated latency/energy distribution
+(fig14/15-style) from the functional backend itself.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import CHUNKS_PER_PAGE, popcount_words
+from repro.core.commands import Command, Op
+from repro.core.engine import SimChipArray
+from repro.flash.params import (BITMAP_BYTES, CHUNK_BYTES, FlashParams,
+                                OPEN_OVERHEAD_BYTES, PAGE_BYTES)
+from repro.flash.timeline import BurstTimeline, ChipBurst
+from repro.kernels.layout import planes_to_chunk_words_xp
+from repro.kernels.sim_fused.ops import sim_fused_lookup
+from repro.kernels.sim_gather.ops import sim_gather
+from repro.kernels.sim_search.ref import sim_search_ref
+from repro.kernels.sim_search.sim_search import sim_search_kernel
+
+from .base import MatchBackend, Ticket
+from .batched import (resolve_gather_responses, resolve_lookup_responses,
+                      resolve_search_responses)
+from .planestore import PlaneStore, next_pow2, padded_rows
+
+QUERY_BYTES = 16               # (query, mask) uint32 pairs shipped per search
+
+
+def decompose(page_addr: int, n_chips: int) -> tuple[int, int]:
+    """Global page -> (chip, local page), striped across the chip array."""
+    return page_addr % n_chips, page_addr // n_chips
+
+
+def compose(chip: int, local: int, n_chips: int) -> int:
+    """(chip, local page) -> global page; inverse of :func:`decompose`."""
+    return local * n_chips + chip
+
+
+@functools.partial(jax.jit, static_argnames=("page_block", "use_kernel",
+                                             "interpret"))
+def _stacked_search(lo, hi, q, m, ids, seeds, *, page_block: int,
+                    use_kernel: bool, interpret: bool):
+    """One vmapped launch over the chip axis: (C, N, 512) planes x
+    (C, Q, 2) queries -> (C, Q, N, 16) packed bitmaps."""
+    if use_kernel:
+        def one_chip(lo, hi, q, m, ids, seeds):
+            return sim_search_kernel(lo, hi, q, m, 0, page_block=page_block,
+                                     randomized=True, interpret=interpret,
+                                     page_ids=ids, page_seeds=seeds)
+    else:
+        def one_chip(lo, hi, q, m, ids, seeds):
+            return sim_search_ref(lo, hi, q, m, randomized=True,
+                                  page_ids=ids, page_seeds=seeds)
+    return jax.vmap(one_chip)(lo, hi, q, m, ids, seeds)
+
+
+class ShardedSsdBackend(MatchBackend):
+    """channels x dies chips, per-chip queues, one stacked launch per burst.
+
+    ``chips`` must hold ``channels * dies_per_channel`` chips (geometry
+    defaults to one channel per chip).  Results are bit-identical to the
+    scalar/batched backends over the same array; like the batched backend
+    it reports ``open_verdict`` CLEAN (use scalar for error injection).
+    """
+
+    def __init__(self, chips: SimChipArray, *, channels: int | None = None,
+                 dies_per_channel: int | None = None, page_block: int = 8,
+                 lookup_block: int = 8, use_kernel: bool = True,
+                 interpret: bool | None = None,
+                 timeline: BurstTimeline | bool | None = None):
+        super().__init__(chips)
+        n_chips = len(chips.chips)
+        if channels is None:
+            channels = n_chips if dies_per_channel is None else \
+                n_chips // dies_per_channel
+        if dies_per_channel is None:
+            dies_per_channel = n_chips // channels
+        if channels * dies_per_channel != n_chips:
+            raise ValueError(
+                f"geometry {channels}x{dies_per_channel} != {n_chips} chips")
+        self.channels = channels
+        self.dies_per_channel = dies_per_channel
+        self.page_block = page_block
+        self.lookup_block = lookup_block
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        if timeline is True:
+            timeline = BurstTimeline(FlashParams(
+                channels=channels, dies_per_channel=dies_per_channel))
+        if timeline is not None and timeline is not False \
+                and timeline.n_chips != n_chips:
+            raise ValueError(f"timeline models {timeline.n_chips} dies, "
+                             f"backend has {n_chips} chips")
+        self.timeline: BurstTimeline | None = timeline or None
+        # One backing arena, addressed by global page; per-chip rows are
+        # grouped at flush time (see module docstring).
+        self.store = PlaneStore(chips, block=page_block, log_staging=True)
+        # Per-chip pending queues — the sharded command namespace.
+        self._pending: list[list[tuple[str, Command, Ticket]]] = [
+            [] for _ in chips.chips]
+
+    # ------------------------------------------------------------ geometry
+    @classmethod
+    def from_geometry(cls, *, channels: int, dies_per_channel: int = 1,
+                      pages_per_chip: int = 512, device_seed: int = 0,
+                      **kw) -> "ShardedSsdBackend":
+        """Build the chip array from SSD geometry (FlashParams convention:
+        ``channels x dies_per_channel`` chips)."""
+        arr = SimChipArray(n_chips=channels * dies_per_channel,
+                           pages_per_chip=pages_per_chip,
+                           device_seed=device_seed)
+        return cls(arr, channels=channels,
+                   dies_per_channel=dies_per_channel, **kw)
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.chips.chips)
+
+    def decompose(self, page_addr: int) -> tuple[int, int]:
+        return decompose(page_addr, self.n_chips)
+
+    # ------------------------------------------------------------- storage
+    def program_entries(self, page_addr: int, entries, **kw):
+        built = self.chips.program_entries(page_addr, entries, **kw)
+        if self.timeline is not None:
+            self.timeline.observe_program(self.decompose(page_addr)[0])
+        return built
+
+    # ------------------------------------------------------------ deferred
+    def _submit(self, kind: str, cmd: Command) -> Ticket:
+        t = Ticket(self)
+        chip, _ = self.decompose(cmd.page_addr)
+        self._pending[chip].append((kind, cmd, t))
+        return t
+
+    def submit_search(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.SEARCH or cmd.query is None or cmd.mask is None:
+            raise ValueError(f"not a search command: {cmd}")
+        return self._submit("search", cmd)
+
+    def submit_gather(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.GATHER or cmd.chunk_bitmap is None:
+            raise ValueError(f"not a gather command: {cmd}")
+        return self._submit("gather", cmd)
+
+    def submit_lookup(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.LOOKUP or cmd.value_page is None:
+            raise ValueError(f"not a lookup command: {cmd}")
+        return self._submit("lookup", cmd)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._pending)
+
+    # --------------------------------------------------------------- flush
+    def flush(self) -> None:
+        if not any(self._pending):
+            return
+        self.stats.flushes += 1
+        searches, lookups, gathers = [], [], []
+        for queue in self._pending:
+            for kind, cmd, t in queue:
+                {"search": searches, "lookup": lookups,
+                 "gather": gathers}[kind].append((cmd, t))
+            queue.clear()
+        bursts: dict[int, ChipBurst] = {}
+        if searches:
+            self._flush_searches(searches, bursts)
+        if lookups:
+            self._flush_lookups(lookups, bursts)
+        if gathers:
+            self._flush_gathers(gathers, bursts)
+        self.stats.staged_bytes = self.store.staged_bytes
+        staged, self.store.staged_log = self.store.staged_log, []
+        if self.timeline is not None:
+            for a in staged:   # dirty/new planes restage in storage mode
+                c, _ = self.decompose(a)
+                self._burst(bursts, c).bus_storage_bytes += PAGE_BYTES
+            self.timeline.observe_flush(
+                [bursts[c] for c in sorted(bursts)])
+
+    def _burst(self, bursts: dict[int, ChipBurst], chip: int) -> ChipBurst:
+        return bursts.setdefault(chip, ChipBurst(chip))
+
+    # ------------------------------------------------------------- searches
+    def _flush_searches(self, searches, bursts) -> None:
+        # Per chip: unique pages -> arena rows; unique (query, mask) ->
+        # operand rows; every command lands at one (chip, qi, pi) cell.
+        n = self.n_chips
+        addrs: list[list[int]] = [[] for _ in range(n)]
+        page_rows: list[dict[int, int]] = [{} for _ in range(n)]
+        query_rows: list[dict[tuple, int]] = [{} for _ in range(n)]
+        q_pairs: list[list] = [[] for _ in range(n)]
+        m_pairs: list[list] = [[] for _ in range(n)]
+        placements = []                        # (chip, qi, pi)
+        for cmd, _ in searches:
+            c, _local = self.decompose(cmd.page_addr)
+            if cmd.page_addr not in page_rows[c]:
+                page_rows[c][cmd.page_addr] = len(addrs[c])
+                addrs[c].append(cmd.page_addr)
+            key = (cmd.query, cmd.mask)
+            if key not in query_rows[c]:
+                query_rows[c][key] = len(q_pairs[c])
+                q_pairs[c].append(cmd.query)
+                m_pairs[c].append(cmd.mask)
+            placements.append((c, query_rows[c][key],
+                               page_rows[c][cmd.page_addr]))
+
+        active = [c for c in range(n) if addrs[c]]
+        slot_of = {c: i for i, c in enumerate(active)}
+        n_pad = max(padded_rows(len(addrs[c]), self.page_block)
+                    for c in active)
+        q_pad = max(next_pow2(len(q_pairs[c])) for c in active)
+        c_pad = next_pow2(len(active))
+
+        # One staging pass over every chip's pages, then one (C, N) gather.
+        flat = [a for c in active for a in addrs[c]]
+        rows = self.store.rows_for(flat)
+        idx2d = np.zeros((c_pad, n_pad), np.int32)
+        off = 0
+        for i, c in enumerate(active):
+            k = len(addrs[c])
+            idx2d[i, :k] = rows[off:off + k]
+            off += k
+            chip = self.chips.chips[c]
+            chip.counters.array_reads += k     # one staged sense per page
+            b = self._burst(bursts, c)
+            b.senses += k
+            b.bus_match_bytes += OPEN_OVERHEAD_BYTES * k
+        lo, hi, ids, seeds = self.store.take2d(idx2d)
+        q = np.zeros((c_pad, q_pad, 2), dtype=np.uint32)
+        m = np.zeros_like(q)
+        for i, c in enumerate(active):
+            q[i, :len(q_pairs[c])] = np.asarray(q_pairs[c], np.uint32)
+            m[i, :len(m_pairs[c])] = np.asarray(m_pairs[c], np.uint32)
+
+        interp = self.interpret
+        if interp is None:
+            from repro.kernels import default_interpret
+            interp = default_interpret()
+        out = np.asarray(_stacked_search(
+            lo, hi, q, m, ids, seeds, page_block=self.page_block,
+            use_kernel=self.use_kernel, interpret=interp))
+
+        self.stats.kernel_launches += 1
+        self.stats.staged_pages += len(flat)
+        self.stats.staged_queries += sum(len(q_pairs[c]) for c in active)
+        self.stats.searches += len(searches)
+        if len(searches) > 1:
+            self.stats.batched_searches += len(searches)
+        for cmd, _ in searches:
+            c, _local = self.decompose(cmd.page_addr)
+            b = self._burst(bursts, c)
+            b.matches += 1
+            b.bus_match_bytes += BITMAP_BYTES
+            b.pcie_bytes += BITMAP_BYTES + QUERY_BYTES
+
+        resolve_search_responses(
+            self.chips, searches,
+            [(slot_of[c], qi, pi) for c, qi, pi in placements], out)
+
+    # -------------------------------------------------------------- lookups
+    def _flush_lookups(self, lookups, bursts) -> None:
+        """Row-stacked fused burst across every chip: ONE launch."""
+        key_addrs = [cmd.page_addr for cmd, _ in lookups]
+        val_addrs = [cmd.value_page for cmd, _ in lookups]
+        k_rows = self.store.rows_for(key_addrs)
+        v_rows = self.store.rows_for(val_addrs)
+        n = len(lookups)
+        n_pad = padded_rows(n, self.lookup_block)
+        klo, khi, kids, kseeds = self.store.take(k_rows, n_pad)
+        vlo, vhi, _, _ = self.store.take(v_rows, n_pad)
+        q = np.zeros((n_pad, 2), dtype=np.uint32)
+        m = np.full((n_pad, 2), 0xFFFFFFFF, dtype=np.uint32)  # pad rows miss
+        q[:n] = np.asarray([cmd.query for cmd, _ in lookups], np.uint32)
+        m[:n] = np.asarray([cmd.mask for cmd, _ in lookups], np.uint32)
+
+        bm, val, slots = sim_fused_lookup(
+            klo, khi, vlo, vhi, q, m, randomized=True,
+            key_ids=kids, key_seeds=kseeds, row_block=self.lookup_block,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        self.stats.kernel_launches += 1
+        self.stats.lookups += n
+        self.stats.staged_pages += len(set(key_addrs) | set(val_addrs))
+        self.stats.staged_queries += n
+        for addrs in (set(key_addrs), set(val_addrs)):
+            for a in addrs:                    # one open per unique page
+                c, _ = self.decompose(a)
+                b = self._burst(bursts, c)
+                b.senses += 1
+                b.bus_match_bytes += OPEN_OVERHEAD_BYTES
+        for cmd, _ in lookups:
+            kc, _ = self.decompose(cmd.page_addr)
+            vc, _ = self.decompose(cmd.value_page)
+            kb = self._burst(bursts, kc)
+            kb.matches += 1
+            kb.bus_match_bytes += BITMAP_BYTES
+            kb.pcie_bytes += BITMAP_BYTES + QUERY_BYTES
+            vb = self._burst(bursts, vc)
+            vb.bus_match_bytes += CHUNK_BYTES
+            vb.pcie_bytes += CHUNK_BYTES
+        resolve_lookup_responses(self.chips, lookups, np.asarray(bm)[:n],
+                                 np.asarray(val)[:n], np.asarray(slots)[:n])
+
+    # -------------------------------------------------------------- gathers
+    def _flush_gathers(self, gathers, bursts) -> None:
+        addrs = [cmd.page_addr for cmd, _ in gathers]
+        rows = self.store.rows_for(addrs)
+        n = len(gathers)
+        n_pad = padded_rows(n, self.page_block)
+        lo, hi, _, _ = self.store.take(rows, n_pad)
+        chunk_words = planes_to_chunk_words_xp(lo, hi, jnp)
+        bm = np.zeros((n_pad, 2), dtype=np.uint32)
+        bm[:n] = np.asarray([cmd.chunk_bitmap for cmd, _ in gathers],
+                            np.uint32)
+        out, _counts = sim_gather(chunk_words, bm,
+                                  max_out=CHUNKS_PER_PAGE,
+                                  page_block=self.page_block,
+                                  interpret=self.interpret,
+                                  use_kernel=self.use_kernel)
+        self.stats.kernel_launches += 1
+        self.stats.gathers += n
+        resolve_gather_responses(self.chips, gathers, np.asarray(out)[:n])
+        for cmd, _ in gathers:
+            c, _local = self.decompose(cmd.page_addr)
+            k = int(popcount_words(
+                np.asarray(cmd.chunk_bitmap, np.uint32)).sum())
+            b = self._burst(bursts, c)
+            b.senses += 1
+            b.bus_match_bytes += CHUNK_BYTES * k
+            b.pcie_bytes += CHUNK_BYTES * k

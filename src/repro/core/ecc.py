@@ -27,9 +27,8 @@ from enum import Enum
 
 import numpy as np
 
-from .bits import (CHUNK_BYTES, CHUNKS_PER_PAGE, PAGE_BYTES, SLOT_BYTES,
-                   bytes_to_slot_words, pair_to_u64, slot_words_to_bytes,
-                   u64_to_pair)
+from .bits import (CHUNK_BYTES, CHUNKS_PER_PAGE, bytes_to_slot_words,
+                   pair_to_u64, slot_words_to_bytes, u64_to_pair)
 
 MAGIC = 0x53494D4348495021  # "SIMCHIP!"
 HEADER_CRC_SLOT = 0

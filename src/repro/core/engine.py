@@ -27,12 +27,10 @@ import dataclasses
 import numpy as np
 
 from . import ecc
-from .bits import (CHUNK_BYTES, CHUNKS_PER_PAGE, PAGE_BYTES, pair_to_u64,
-                   popcount_words, unpack_bitmap)
+from .bits import CHUNK_BYTES, CHUNKS_PER_PAGE, PAGE_BYTES, unpack_bitmap
 from .commands import (Command, GatherResponse, Op, ReadFullResponse,
                        SearchResponse)
 from .ecc import EccConfig, OpenVerdict, optimistic_open
-from .match import gather_chunks, search_page
 from .page import BuiltPage, build_page, page_slot_words
 from .randomize import chunk_stream_words, randomize_query, stream_words
 

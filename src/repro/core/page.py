@@ -12,8 +12,8 @@ import dataclasses
 import numpy as np
 
 from . import ecc
-from .bits import (CHUNK_BYTES, CHUNKS_PER_PAGE, PAGE_BYTES, SLOTS_PER_CHUNK,
-                   SLOTS_PER_PAGE, bytes_to_slot_words, slot_words_to_bytes,
+from .bits import (PAGE_BYTES, SLOTS_PER_CHUNK, SLOTS_PER_PAGE,
+                   bytes_to_slot_words, slot_words_to_bytes,
                    u64_array_to_pairs)
 from .randomize import randomize_page_words
 

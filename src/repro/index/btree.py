@@ -15,6 +15,13 @@ one batched launch per phase (§IV-E).
 
 The host-side B+Tree logic is deliberately ordinary; everything interesting
 happens in how little data crosses the bus.
+
+Page addressing goes through the backend's namespace: on a
+``ShardedSsdBackend`` the sequentially-allocated leaf pages stripe across
+channels x dies (``backend/sharded.py::decompose``), so a leaf's key and
+value page land on *different* chips — the §V-A cross-die pairing — and a
+``lookup_batch``/``range_query`` burst fans out over every chip while
+still resolving in one stacked launch per phase.
 """
 from __future__ import annotations
 

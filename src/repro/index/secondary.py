@@ -8,7 +8,10 @@ which the host decodes e.g. the user id.
 Predicates execute through a MatchBackend: every page's search commands are
 enqueued and flushed together, so a table scan is one batched launch (and
 one follow-up gather launch) on the kernel backend instead of a per-page
-command loop.
+command loop.  Sequential page allocation stripes the table across a
+``ShardedSsdBackend``'s channels x dies, so a full-table predicate is the
+best case for the stacked launch: every chip matches its own shard of the
+table in parallel within ONE device dispatch.
 """
 from __future__ import annotations
 

@@ -1,8 +1,6 @@
 """Public wrapper for flash attention: (B, S, H, D) layout, GQA flattening."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.kernels import default_interpret
 from .flash_attention import flash_attention_kernel
 from .ref import attention_ref

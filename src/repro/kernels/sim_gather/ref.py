@@ -16,7 +16,6 @@ def sim_gather_ref(chunks, bitmap_words, max_out: int):
     """
     chunks = jnp.asarray(chunks, jnp.uint32)
     bm = jnp.asarray(bitmap_words, jnp.uint32)
-    n = chunks.shape[0]
     j = jnp.arange(64, dtype=jnp.uint32)[None, :]                # (1, 64)
     word = jnp.where(j < 32, bm[:, 0:1], bm[:, 1:2])             # (N, 64)
     bit = (word >> (j % 32)) & jnp.uint32(1)                     # (N, 64)

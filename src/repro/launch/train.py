@@ -12,16 +12,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import init_model
-from repro.parallel.sharding import (batch_sharding, block_compute_shardings,
+from repro.parallel.sharding import (block_compute_shardings,
                                      shardings_for_tree)
 from repro.train.checkpoint import (latest_step, load_checkpoint,
                                     save_checkpoint)

@@ -11,11 +11,9 @@ router logits and losses in float32.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .config import ModelConfig
 

@@ -12,9 +12,6 @@ Caches are family-appropriate: (k, v) stacks for attention layers,
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -179,7 +179,6 @@ def apply_mlstm(p, x, cfg: ModelConfig, *, state=None,
 
 def init_slstm(key, cfg: ModelConfig, n_layers: int):
     d = cfg.d_model
-    dt = pdtype(cfg)
     ks = jax.random.split(key, 2)
     L = (n_layers,)
     params = {

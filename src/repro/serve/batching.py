@@ -17,7 +17,6 @@ import dataclasses
 import time
 from collections import deque
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig

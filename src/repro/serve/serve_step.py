@@ -7,7 +7,6 @@ archs, or recurrent state for ssm/hybrid).  The SiM-paged cache variant
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig

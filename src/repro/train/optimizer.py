@@ -7,7 +7,6 @@ parameter logical axes, so FSDP shards moments exactly like weights.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,10 +10,6 @@ that reduction is replaced by an explicit int8 error-feedback stage
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

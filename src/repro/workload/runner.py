@@ -18,6 +18,13 @@ Two executors live here:
                          on-device, the §III-B in-buffer pipelining.  All
                          backend/mode combinations must return identical
                          read values (tests/test_backend_parity).
+
+``run_functional`` on a timeline-coupled ``ShardedSsdBackend`` closes the
+loop between the two executors: the functional replay reports each flush's
+per-chip batch sizes to ``flash/timeline.py``, which advances the same
+die/channel/PCIe resource timelines ``run`` uses — so the result carries
+bit-exact values *and* a simulated per-burst latency distribution + energy
+account (fig14/15-style) from one execution.
 """
 from __future__ import annotations
 
@@ -30,7 +37,6 @@ from repro.backend import as_backend
 from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
 from repro.core.commands import Command
 from repro.core.page import mask_header_slots
-from repro.core.scheduler import DeadlineScheduler
 from repro.flash.params import FlashParams
 from repro.flash.ssd import SSDSim
 from .ycsb import KEYS_PER_PAGE, Workload, value_page_of
@@ -66,6 +72,13 @@ class FunctionalRunResult:
     flushes: int              # backend flushes issued by the executor
     kernel_launches: int      # device launches (0 on the scalar backend)
     staged_bytes: int = 0     # host->device page bytes (0 on scalar)
+    # Timeline coupling (sharded backend with a BurstTimeline attached):
+    # simulated SSD time/energy for the replayed op stream, so fig14/15-
+    # style latency distributions come out of the *functional* run too.
+    burst_latencies_ns: np.ndarray | None = None   # one entry per flush
+    write_latencies_ns: np.ndarray | None = None   # one entry per program
+    sim_makespan_ns: float = 0.0
+    sim_energy_pj: float = 0.0
 
 
 def run_functional(workload: Workload, backend, *, burst: int = 64,
@@ -99,6 +112,12 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         backend.program_entries(p, stored_keys[s:s + KEYS_PER_PAGE])
         backend.program_entries(value_page_of(p, n_key_pages),
                                 values[s:s + KEYS_PER_PAGE])
+
+    # Timeline-coupled backends (sharded + BurstTimeline) measure the
+    # replayed op stream only — the bulk load above is setup, not workload.
+    timeline = getattr(backend, "timeline", None)
+    if timeline is not None:
+        timeline.reset()
 
     n = len(workload.ops)
     out = np.zeros(n, dtype=np.uint64)
@@ -176,11 +195,17 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
             backend.program_entries(value_page_of(p, n_key_pages),
                                     values[s:s + KEYS_PER_PAGE])
     resolve_burst()
-    return FunctionalRunResult(
+    result = FunctionalRunResult(
         read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
         flushes=flushes,
         kernel_launches=backend.stats.kernel_launches,
         staged_bytes=backend.stats.staged_bytes)
+    if timeline is not None:
+        result.burst_latencies_ns = np.asarray(timeline.burst_latencies)
+        result.write_latencies_ns = np.asarray(timeline.write_latencies)
+        result.sim_makespan_ns = timeline.now
+        result.sim_energy_pj = timeline.energy_pj
+    return result
 
 
 def run(workload: Workload, *, params: FlashParams, system: str,

@@ -7,8 +7,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitweaving import Column, RowCodec
-from repro.core.range_query import (MaskedQuery, approximate_range,
-                                    exact_range, false_positive_bound)
+from repro.core.range_query import (approximate_range, exact_range,
+                                    false_positive_bound)
 
 
 def test_exact_range_small():

@@ -12,7 +12,6 @@ import textwrap
 from pathlib import Path
 
 import numpy as np
-import pytest
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -108,7 +107,8 @@ def test_pod_compressed_allreduce_converges():
         step_ref = make_train_step(cfg, opt_cfg)
         with mesh:
             losses, ref_losses = [], []
-            pc = jax.device_put(params, p_sh); oc = opt
+            pc = jax.device_put(params, p_sh)
+            oc = opt
             pr, orr = params, opt
             for s in range(15):
                 batch = batch_at_step(data, s)

@@ -5,14 +5,12 @@ drop-in device-side replacement for the serving/training hot spot.
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced_config
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.models.config import ModelConfig
 from repro.models.layers import _attend, causal_mask_bias
 
 

@@ -8,7 +8,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.bits import (pack_bitmap, u64_array_to_pairs, unpack_bitmap)
+from repro.core.bits import u64_array_to_pairs, unpack_bitmap
 from repro.core.page import build_page
 from repro.kernels.layout import (chunk_words_to_pages, pages_to_chunk_words,
                                   pages_to_planes, planes_to_pages)

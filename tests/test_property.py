@@ -10,7 +10,7 @@ from repro.core.bits import (pack_bitmap, u64_array_to_pairs, u64_to_pair,
                              unpack_bitmap)
 from repro.core.match import match_slots, search_page
 from repro.core.page import build_page
-from repro.core.randomize import randomize_page_words, randomize_query
+from repro.core.randomize import randomize_query
 from repro.kernels.layout import pages_to_planes
 from repro.kernels.sim_search.ref import sim_search_ref
 

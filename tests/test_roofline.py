@@ -1,7 +1,6 @@
 """HLO analyzer validation: trip counts, dot flops, collective parsing."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo, parse_computations

@@ -1,6 +1,5 @@
 """Tests: page cache, SSD simulator, workload generator, deadline scheduler."""
 import numpy as np
-import pytest
 
 from repro.cache.pagecache import PageCache
 from repro.core.commands import Command
@@ -185,7 +184,7 @@ def test_deadline_scheduler_drain_and_stats():
     for i in range(5):
         sch.submit(Command.search(1, i), now_ns=0)
     sch.submit(Command.search(2, 9), now_ns=0)
-    rest = list(sch.drain())
+    list(sch.drain())
     assert sch.stats.submitted == 6
     assert sch.stats.max_batch == 5
     assert len(sch) == 0

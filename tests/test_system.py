@@ -3,11 +3,9 @@ the full stack (workload -> SSD simulator -> metrics), plus cross-layer
 consistency between the functional chip, the kernels, and the indexes.
 """
 import numpy as np
-import pytest
 
-from repro.core import Command, SimChip, unpack_bitmap
+from repro.core import Command, SimChip
 from repro.core.engine import SimChipArray
-from repro.core.page import build_page, mask_header_slots
 from repro.flash.params import DEFAULT_PARAMS
 from repro.index.baseline import BaselineBTree
 from repro.index.btree import SimBTree
