@@ -38,6 +38,7 @@ RATIO_KEEP = 0.5           # ratios may lose half their baseline margin...
 RATIO_FLOORS = {           # ...but never dip below the hard gates
     "sharded_speedup_16chip": 2.0,
     "sharded_speedup_4chip": 1.2,
+    "plan_fused_speedup": 2.0,
 }
 
 

@@ -15,6 +15,8 @@ from benchmarks.common import Timer, emit, write_bench_json
 from repro.backend import ShardedSsdBackend, make_backend
 from repro.core.commands import Command
 from repro.core.engine import SimChipArray
+from repro.core.range_query import (evaluate_plan_on_pages,
+                                    evaluate_plan_per_pass, exact_range)
 from repro.kernels.sim_search.ops import sim_search
 from repro.kernels.sim_gather.ops import sim_gather
 from repro.kernels.sim_fused.ops import sim_fused
@@ -173,6 +175,97 @@ def staged_bytes_per_flush(n_pages: int = 32, n_q: int = 16) -> None:
     assert backend.stats.staged_bytes - before == 4096
 
 
+def range_plan_comparison(n_pages: int = 32) -> None:
+    """Fused Op.PLAN vs per-pass searches (Fig 10 in-latch accumulation).
+
+    An exact 64-bit range decomposes into ~100 masked-equality passes; the
+    per-pass path launches them as one batched search (Q = passes) and
+    combines passes x pages bitmaps on the host, crossing 64 B per pass
+    per page.  The fused PLAN path evaluates and combines every pass
+    in-VMEM and ships ONE 64 B bitmap per page.  Gates: the result-byte
+    counters are exact contracts (the drop == the plan's pass count), and
+    the fused path must beat the per-pass batched path >= 2x end to end
+    (``plan_fused_speedup``, also floored in check_regression.py).
+    Scalar / batched / sharded results are asserted bit-identical.
+    """
+    rng = np.random.default_rng(7)
+    page_keys = [rng.integers(1, 2**62, 404, dtype=np.uint64)
+                 for _ in range(n_pages)]
+    # A wide, unaligned exact range: the worst-case §V-C decomposition
+    # (~2*width passes — the Fig 10 regime the fused path exists for).
+    lo = 5
+    hi = (1 << 62) - 3
+    plan = exact_range(lo, hi, width=64)
+    assert plan.n_passes > 90, plan.n_passes
+    pages = list(range(n_pages))
+
+    def programmed(name):
+        if name == "sharded":
+            be = ShardedSsdBackend.from_geometry(
+                channels=4, dies_per_channel=2,
+                pages_per_chip=n_pages // 8 + 1, device_seed=5)
+        else:
+            be = make_backend(name, SimChipArray(
+                n_chips=8, pages_per_chip=n_pages // 8 + 1, device_seed=5))
+        for p, keys in enumerate(page_keys):
+            be.program_entries(p, keys)
+        return be
+
+    scalar = programmed("scalar")
+    batched = programmed("batched")
+    sharded = programmed("sharded")
+
+    # Warm arenas + compile caches, and check cross-backend bit-parity.
+    ref = evaluate_plan_on_pages(scalar, plan, pages)
+    per_pass_ref = evaluate_plan_per_pass(batched, plan, pages)
+    np.testing.assert_array_equal(ref, per_pass_ref)
+    for be in (batched, sharded):
+        np.testing.assert_array_equal(ref, evaluate_plan_on_pages(
+            be, plan, pages))
+
+    rb0 = batched.stats.result_bytes
+    with Timer() as tpp:
+        evaluate_plan_per_pass(batched, plan, pages)
+    per_pass_bytes = batched.stats.result_bytes - rb0
+    rb0 = batched.stats.result_bytes
+    with Timer() as tf:
+        evaluate_plan_on_pages(batched, plan, pages)
+    fused_bytes = batched.stats.result_bytes - rb0
+    # Best-of-2 on both timed paths: interpret-mode wall noise must not
+    # flap the ratio gate.
+    with Timer() as tpp2:
+        evaluate_plan_per_pass(batched, plan, pages)
+    with Timer() as tf2:
+        evaluate_plan_on_pages(batched, plan, pages)
+    t_pp = min(tpp.elapsed_us, tpp2.elapsed_us)
+    t_f = min(tf.elapsed_us, tf2.elapsed_us)
+    with Timer() as tsh:
+        evaluate_plan_on_pages(sharded, plan, pages)
+    with Timer() as tsc:
+        evaluate_plan_on_pages(scalar, plan, pages)
+
+    # Exact bandwidth contract: the drop equals the plan's pass count.
+    assert fused_bytes == 64 * n_pages, fused_bytes
+    assert per_pass_bytes == 64 * plan.n_passes * n_pages, per_pass_bytes
+    speedup = t_pp / t_f
+    assert speedup >= 2.0, \
+        f"fused plan speedup {speedup:.1f}x < 2x gate"
+    emit("range_plan_per_pass", t_pp / n_pages,
+         f"passes={plan.n_passes}_pages={n_pages}_batched_search_combine")
+    emit("range_plan_fused", t_f / n_pages,
+         f"passes={plan.n_passes}_pages={n_pages}_one_plan_launch")
+    emit("range_plan_fused_sharded", tsh.elapsed_us / n_pages,
+         f"passes={plan.n_passes}_pages={n_pages}_geometry=4x2")
+    emit("range_plan_scalar", tsc.elapsed_us / n_pages,
+         f"passes={plan.n_passes}_pages={n_pages}_per_pass_chip_reference")
+    emit("plan_fused_speedup", speedup,
+         f"per_pass_over_fused_passes={plan.n_passes}_ci_gate>=2x")
+    emit("plan_result_bytes_per_pass", per_pass_bytes,
+         f"64B_x_{plan.n_passes}passes_x_{n_pages}pages")
+    emit("plan_result_bytes_fused", fused_bytes,
+         f"64B_x_{n_pages}pages_in_latch_combine")
+
+
 def sharded_scaling(n_pages: int = 384, n_q: int = 384) -> None:
     """ShardedSsdBackend throughput at 1 vs 4 vs 16 chips (§VI-A scaling).
 
@@ -303,6 +396,7 @@ def main(scale: int = 1) -> None:
     backend_batch_comparison()
     functional_burst_comparison()
     staged_bytes_per_flush()
+    range_plan_comparison()
     sharded_scaling()
     functional_sharded_timeline()
     write_bench_json("kernel_micro")

@@ -25,7 +25,18 @@ Besides search/gather, backends implement ``submit_lookup`` — the fused
 point-lookup primitive (key-page search + first-matching-slot value gather,
 the §V-A paired-page pattern) that a YCSB read burst or a B+Tree
 ``lookup_batch`` resolves in ONE device launch instead of a search launch,
-a Python bitmap decode, and a gather launch.
+a Python bitmap decode, and a gather launch — and ``submit_plan``, the
+fused multi-pass range-plan primitive (Op.PLAN): every include/exclude
+pass of a §V-C range decomposition evaluates on-device and the OR/AND-NOT
+combine happens in-latch (paper Fig 10), so ONE 64 B bitmap per page comes
+back instead of one per pass (``BackendStats.result_bytes`` counts the
+difference).
+
+Result delivery is *lazy* on the kernel backends: ``flush()`` dispatches
+the launches and attaches a ``LazyResultBatch`` to each ticket; the
+device->host transfer and host tail run at the first ``result()`` call of
+a burst, so JAX async dispatch overlaps staging of burst k+1 with device
+compute of burst k.
 
 A third implementation, ``ShardedSsdBackend`` (sharded.py), scales the
 same contract to a whole SSD: ``channels x dies_per_channel`` chips, each
@@ -36,8 +47,8 @@ The scalar and batched backends are its degenerate 1x1 cases and its
 bit-exactness references.
 
 Future backends the ROADMAP names (async, replicated) implement the same
-four methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
-``flush``.
+five methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
+``submit_plan``, ``flush``.
 """
 from __future__ import annotations
 
@@ -54,6 +65,7 @@ class BackendStats:
     searches: int = 0          # search commands resolved
     gathers: int = 0           # gather commands resolved
     lookups: int = 0           # fused lookup commands resolved
+    plans: int = 0             # fused multi-pass plan commands resolved
     flushes: int = 0           # non-empty flush() calls
     kernel_launches: int = 0   # device launches (batched backend only)
     staged_pages: int = 0      # page rows referenced across launches
@@ -63,6 +75,47 @@ class BackendStats:
                                # once the working set is warm (only new or
                                # reprogrammed pages ever re-ship)
     batched_searches: int = 0  # searches that shared a launch with >= 1 peer
+    result_bytes: int = 0      # exact device->host result payload: 64 B per
+                               # search/plan bitmap (per unique launch cell
+                               # on kernel backends — dedup'd commands share
+                               # one transfer), 64 B per gathered chunk,
+                               # 64 B bitmap + 64 B value chunk (on hit) per
+                               # lookup.  A fused PLAN pays 64 B/page where
+                               # the per-pass path pays 64 B/pass/page.
+
+
+class LazyResultBatch:
+    """Deferred host tail of one flushed launch.
+
+    The kernel backends resolve tickets *lazily*: ``flush()`` dispatches
+    the launch and keeps its outputs as device arrays, attaching one of
+    these to every ticket of the burst; the first ``result()`` call runs
+    the host tail (device->host transfer, de-randomize/verify, ticket
+    resolution) for the whole burst at once.  Until then JAX's async
+    dispatch lets host staging of burst k+1 overlap device compute of
+    burst k.  ``run()`` is idempotent — later tickets find themselves
+    already resolved.
+    """
+
+    __slots__ = ("_fn", "_exc")
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._exc = None
+
+    def run(self) -> None:
+        if self._exc is not None:
+            # A previous drain attempt failed: re-raise the ROOT cause on
+            # every later ticket of the burst instead of degenerating into
+            # the misleading "ticket unresolved" bookkeeping error.
+            raise self._exc
+        fn, self._fn = self._fn, None
+        if fn is not None:
+            try:
+                fn()
+            except BaseException as e:
+                self._exc = e
+                raise
 
 
 class Ticket:
@@ -70,25 +123,36 @@ class Ticket:
 
     ``result()`` on an unresolved ticket flushes the owning backend first,
     so eager callers never deadlock; batch-aware callers submit many
-    tickets and flush once.
+    tickets and flush once.  On the kernel backends a flush attaches a
+    :class:`LazyResultBatch` instead of a value — the launch output stays
+    on-device until the first ``result()`` of the burst triggers the host
+    transfer (``done`` reads True either way: the result is available
+    without another flush).
     """
 
-    __slots__ = ("_backend", "_value")
+    __slots__ = ("_backend", "_value", "_batch")
 
     def __init__(self, backend: "MatchBackend"):
         self._backend = backend
         self._value = None
+        self._batch = None
 
     def _resolve(self, value) -> None:
         self._value = value
+        self._batch = None
+
+    def _defer(self, batch: LazyResultBatch) -> None:
+        self._batch = batch
 
     @property
     def done(self) -> bool:
-        return self._value is not None
+        return self._value is not None or self._batch is not None
 
     def result(self):
-        if self._value is None:
+        if self._value is None and self._batch is None:
             self._backend.flush()
+        if self._value is None and self._batch is not None:
+            self._batch.run()
         if self._value is None:
             raise RuntimeError("flush() left a submitted ticket unresolved")
         return self._value
@@ -122,6 +186,16 @@ class MatchBackend(abc.ABC):
     def lookup(self, cmd: Command) -> LookupResponse:
         return self.submit_lookup(cmd).result()
 
+    def plan(self, cmd: Command) -> SearchResponse:
+        return self.submit_plan(cmd).result()
+
+    def _defer_all(self, tickets, tail) -> None:
+        """Attach one lazy host tail to a burst's (cmd, ticket) pairs: the
+        launch outputs stay device-resident until the first result()."""
+        batch = LazyResultBatch(tail)
+        for _, t in tickets:
+            t._defer(batch)
+
     # ------------------------------------------------------------ deferred
     @abc.abstractmethod
     def submit_search(self, cmd: Command) -> Ticket:
@@ -136,6 +210,13 @@ class MatchBackend(abc.ABC):
         """Queue a fused point lookup (Op.LOOKUP): search the key page,
         select the first matching user slot, gather that slot's chunk from
         the paired value page.  Resolves to a LookupResponse at flush()."""
+
+    @abc.abstractmethod
+    def submit_plan(self, cmd: Command) -> Ticket:
+        """Queue a fused multi-pass range plan (Op.PLAN): evaluate every
+        include/exclude pass against the page and accumulate OR / AND-NOT
+        in-latch (paper Fig 10).  Resolves to a SearchResponse holding the
+        ONE combined bitmap — 64 B crosses per page, not per pass."""
 
     @abc.abstractmethod
     def flush(self) -> None:

@@ -25,7 +25,20 @@ At flush time the deferred queues stage into dense device operands:
   * queued lookups (Op.LOOKUP) run the fused ``sim_fused_lookup`` kernel:
     key-page search, first-matching-user-slot selection, and the paired
     value page's same-slot chunk gather all happen in ONE launch — no
-    bitmap round trip through Python between search and gather.
+    bitmap round trip through Python between search and gather;
+  * queued plans (Op.PLAN) run the fused ``sim_plan`` kernel: every
+    include/exclude pass of a §V-C range decomposition matches in-VMEM and
+    the OR/AND-NOT combine (paper Fig 10) happens before anything leaves
+    the device — ONE 64 B bitmap per (plan, page) instead of one per pass.
+    Unique (include, exclude) tuples dedup to plan groups the way unique
+    (query, mask) pairs dedup to query rows.
+
+Ticket resolution is *lazy*: each flush phase dispatches its launch and
+attaches a ``LazyResultBatch`` holding the device-array outputs; the host
+transfer, de-randomization and CRC verification run at the first
+``result()`` call of the burst.  JAX async dispatch therefore overlaps
+staging of burst k+1 with device compute of burst k, and
+``BackendStats.result_bytes`` counts exactly what crossed device->host.
 
 Results are bit-identical to ``ScalarBackend`` for every programmed page
 (damaged or not): both paths match against the same stored image with the
@@ -57,6 +70,7 @@ from repro.kernels.layout import planes_to_chunk_words_xp
 from repro.kernels.sim_fused.ops import sim_fused_lookup
 from repro.kernels.sim_fused.sim_fused import NO_SLOT
 from repro.kernels.sim_gather.ops import sim_gather
+from repro.kernels.sim_plan.ops import plan_pass_rows, sim_plan
 from repro.kernels.sim_search.ops import sim_search
 
 from .base import MatchBackend, Ticket
@@ -68,31 +82,76 @@ from .planestore import PlaneStore, next_pow2, padded_rows
 # single-chip launches and sharded's stacked multi-chip launches): given the
 # launch outputs as numpy arrays, de-randomize / verify on the controller
 # side, bump the owning chips' functional counters and resolve the tickets.
+# Each returns the exact device->host result payload in bytes (the
+# ``BackendStats.result_bytes`` contract); with lazy tickets they run at the
+# first ``result()`` call of a burst, not at flush.
 # ---------------------------------------------------------------------------
 
-def resolve_search_responses(chips, searches, placements, out) -> None:
-    """Resolve search tickets from launch output rows.
+def _resolve_bitmap_responses(chips, cmds, placements, out,
+                              matches_of) -> int:
+    """Resolve bitmap-shaped (search / plan) tickets from launch output.
 
     ``placements[i]`` is the index tuple of command i's bitmap in ``out``
     (e.g. ``(qi, pi)`` for a single-chip launch, ``(ci, qi, pi)`` for a
-    chip-stacked one).
+    chip-stacked one).  Commands that dedup'd into the same launch cell
+    share ONE host copy of the bitmap (and its popcount) — one copy per
+    unique placement, detached from ``out`` so later mutation of the
+    launch buffer can never alias into a response.  ``matches_of(cmd)``
+    is the on-chip match-op count the command's chip executed (1 for a
+    search, ``n_passes`` for a plan).  Returns result bytes: 64 B per
+    unique placement (shared cells cross the link once).
     """
-    for (cmd, ticket), idx in zip(searches, placements):
-        bitmap = np.asarray(out[idx]).copy()
+    cache: dict[tuple, tuple[np.ndarray, int]] = {}
+    for (cmd, ticket), idx in zip(cmds, placements):
+        entry = cache.get(idx)
+        if entry is None:
+            bitmap = np.array(out[idx], copy=True)
+            entry = cache[idx] = (bitmap,
+                                  int(popcount_words(bitmap).sum()))
+        bitmap, count = entry
         chip, _ = chips.route(cmd.page_addr)
-        chip.counters.searches += 1
+        chip.counters.searches += matches_of(cmd)
         ticket._resolve(SearchResponse(
-            bitmap_words=bitmap,
-            match_count=int(popcount_words(bitmap).sum()),
+            bitmap_words=bitmap, match_count=count,
             open_verdict=OpenVerdict.CLEAN.value))
+    return 64 * len(cache)
 
 
-def resolve_lookup_responses(chips, lookups, bm, val, slots) -> None:
+def resolve_search_responses(chips, searches, placements, out) -> int:
+    return _resolve_bitmap_responses(chips, searches, placements, out,
+                                     lambda cmd: 1)
+
+
+def resolve_plan_responses(chips, plans, placements, out) -> int:
+    """A PLAN's chip executed ``n_passes`` match ops, but only the one
+    combined 64 B bitmap per unique cell crossed — the Fig 10 win."""
+    return _resolve_bitmap_responses(chips, plans, placements, out,
+                                     lambda cmd: cmd.n_passes)
+
+
+def snapshot_parities(chips, addrs) -> dict:
+    """Flush-time copy of each page's inner-code parities.
+
+    Lazy host tails verify CRCs at drain time, which may be AFTER a
+    reprogram of one of the burst's pages; the launch itself captured the
+    pre-write plane snapshot, so the verification must compare against
+    the parities as of flush, not whatever the chip holds at drain.
+    """
+    snap = {}
+    for a in set(addrs):
+        chip, local = chips.route(a)
+        snap[int(a)] = chip.pages[local].chunk_parities.copy()
+    return snap
+
+
+def resolve_lookup_responses(chips, lookups, bm, val, slots,
+                             parity_snap) -> int:
     """Fused-lookup host tail: batched de-randomize + inner-code verify of
     every hit's value chunk, then ticket resolution.
 
     ``bm`` (n, 16), ``val`` (n, 16), ``slots`` (n,) are the launch outputs
-    trimmed to the burst length.
+    trimmed to the burst length; ``parity_snap`` maps each value page to
+    its flush-time ``snapshot_parities`` row.
     """
     n = len(lookups)
     key_addrs = [cmd.page_addr for cmd, _ in lookups]
@@ -114,7 +173,7 @@ def resolve_lookup_responses(chips, lookups, bm, val, slots) -> None:
             chip, local = chips.route(val_addrs[int(i)])
             v_locals.append(local)
             v_seeds.append(chip.device_seed & 0xFFFFFFFF)
-            parities.append(chip.pages[local].chunk_parities[int(c)])
+            parities.append(parity_snap[int(val_addrs[int(i)])][int(c)])
             chip.counters.array_reads += 1
             chip.counters.gathers += 1
             chip.counters.chunks_gathered += 1
@@ -137,11 +196,14 @@ def resolve_lookup_responses(chips, lookups, bm, val, slots) -> None:
             search=resp,
             value_slot=int(slots[i]) if hit[i] else None,
             value=values[i], parity_ok=bool(parity[i])))
+    return 64 * n + 64 * int(hit_idx.size)
 
 
-def resolve_gather_responses(chips, gathers, out) -> int:
+def resolve_gather_responses(chips, gathers, out, parity_snap) -> int:
     """Gather host tail: one stream regeneration + one CRC pass for every
-    selected chunk of the whole burst.  Returns total chunks gathered."""
+    selected chunk of the whole burst.  ``parity_snap`` holds each page's
+    flush-time ``snapshot_parities`` row.  Returns result bytes (64 B per
+    gathered chunk)."""
     owners, all_locals, all_chunks, all_seeds, all_parities = \
         [], [], [], [], []
     chunk_ids_per = []
@@ -156,7 +218,7 @@ def resolve_gather_responses(chips, gathers, out) -> int:
         all_chunks.extend(chunk_ids.tolist())
         all_seeds.extend([chip.device_seed & 0xFFFFFFFF]
                          * chunk_ids.size)
-        all_parities.append(chip.pages[local].chunk_parities[chunk_ids])
+        all_parities.append(parity_snap[int(cmd.page_addr)][chunk_ids])
 
     k_total = len(all_chunks)
     if k_total:
@@ -185,7 +247,7 @@ def resolve_gather_responses(chips, gathers, out) -> int:
         chip.counters.chunks_gathered += k
         ticket._resolve(GatherResponse(chunks=plain, chunk_ids=chunk_ids,
                                        parity_ok=parity_ok))
-    return k_total
+    return 64 * k_total
 
 
 class BatchedKernelBackend(MatchBackend):
@@ -201,6 +263,7 @@ class BatchedKernelBackend(MatchBackend):
         self._searches: list[tuple[Command, Ticket]] = []
         self._gathers: list[tuple[Command, Ticket]] = []
         self._lookups: list[tuple[Command, Ticket]] = []
+        self._plans: list[tuple[Command, Ticket]] = []
 
     # ------------------------------------------------------------ deferred
     def submit_search(self, cmd: Command) -> Ticket:
@@ -224,19 +287,31 @@ class BatchedKernelBackend(MatchBackend):
         self._lookups.append((cmd, t))
         return t
 
+    def submit_plan(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.PLAN or cmd.plan_include is None:
+            raise ValueError(f"not a plan command: {cmd}")
+        t = Ticket(self)
+        self._plans.append((cmd, t))
+        return t
+
     @property
     def pending(self) -> int:
-        return len(self._searches) + len(self._gathers) + len(self._lookups)
+        return (len(self._searches) + len(self._gathers)
+                + len(self._lookups) + len(self._plans))
 
     def flush(self) -> None:
-        if not (self._searches or self._gathers or self._lookups):
+        if not (self._searches or self._gathers or self._lookups
+                or self._plans):
             return
         self.stats.flushes += 1
         searches, self._searches = self._searches, []
         lookups, self._lookups = self._lookups, []
         gathers, self._gathers = self._gathers, []
+        plans, self._plans = self._plans, []
         if searches:
             self._flush_searches(searches)
+        if plans:
+            self._flush_plans(plans)
         if lookups:
             self._flush_lookups(lookups)
         if gathers:
@@ -277,11 +352,11 @@ class BatchedKernelBackend(MatchBackend):
         q[:n_queries] = np.asarray(q_pairs, dtype=np.uint32)
         m[:n_queries] = np.asarray(m_pairs, dtype=np.uint32)
 
-        out = np.asarray(sim_search(
+        out = sim_search(
             lo, hi, q, m, randomized=True,
             page_ids=page_ids, page_seeds=page_seeds,
             page_block=self.page_block, use_kernel=self.use_kernel,
-            interpret=self.interpret))         # (Qpad, Npad, 16)
+            interpret=self.interpret)          # (Qpad, Npad, 16) on device
 
         self.stats.kernel_launches += 1
         self.stats.staged_pages += len(addrs)
@@ -290,7 +365,67 @@ class BatchedKernelBackend(MatchBackend):
         if len(searches) > 1:
             self.stats.batched_searches += len(searches)
 
-        resolve_search_responses(self.chips, searches, placements, out)
+        def tail(out=out, searches=searches, placements=placements):
+            self.stats.result_bytes += resolve_search_responses(
+                self.chips, searches, placements, np.asarray(out))
+        self._defer_all(searches, tail)
+
+    # ---------------------------------------------------------------- plans
+    def _flush_plans(self, plans) -> None:
+        """Fused multi-pass range plans: one launch, one 64 B bitmap/page.
+
+        Unique pages dedup to arena rows exactly like searches; unique
+        (include, exclude) pass tuples dedup to plan *groups* (the Fig 10
+        dataflow runs once per group x page, commands sharing both land on
+        the same launch cell).  Pass rows pad to a power of two and groups
+        to a power of two so repeated plan bursts reuse compiled kernels.
+        """
+        page_rows: dict[int, int] = {}
+        group_rows: dict[tuple, int] = {}
+        addrs: list[int] = []
+        groups: list[tuple] = []
+        placements = []                        # (gi, pi) per command
+        for cmd, _ in plans:
+            if cmd.page_addr not in page_rows:
+                page_rows[cmd.page_addr] = len(addrs)
+                addrs.append(cmd.page_addr)
+            key = (cmd.plan_include, cmd.plan_exclude)
+            if key not in group_rows:
+                group_rows[key] = len(groups)
+                groups.append(key)
+            placements.append((group_rows[key], page_rows[cmd.page_addr]))
+
+        rows = self.store.rows_for(addrs)
+        for a in addrs:                        # one staged sense per page,
+            chip, _ = self.chips.route(a)      # amortized over every pass
+            chip.counters.array_reads += 1
+
+        n_pages = padded_rows(len(addrs), self.page_block)
+        lo, hi, page_ids, page_seeds = self.store.take(rows, n_pages)
+        p_pad = next_pow2(max(max(len(i) + len(e) for i, e in groups), 1))
+        g_pad = next_pow2(len(groups))
+        q = np.zeros((g_pad, p_pad, 2), dtype=np.uint32)
+        m = np.zeros_like(q)
+        f = np.zeros((g_pad, p_pad), dtype=np.uint32)
+        for gi, (inc, exc) in enumerate(groups):
+            q[gi], m[gi], f[gi] = plan_pass_rows(inc, exc, p_pad)
+
+        out = sim_plan(
+            lo, hi, q, m, f, randomized=True,
+            page_ids=page_ids, page_seeds=page_seeds,
+            page_block=self.page_block, use_kernel=self.use_kernel,
+            interpret=self.interpret)          # (Gpad, Npad, 16) on device
+
+        self.stats.kernel_launches += 1
+        self.stats.staged_pages += len(addrs)
+        self.stats.staged_queries += sum(len(i) + len(e)
+                                         for i, e in groups)
+        self.stats.plans += len(plans)
+
+        def tail(out=out, plans=plans, placements=placements):
+            self.stats.result_bytes += resolve_plan_responses(
+                self.chips, plans, placements, np.asarray(out))
+        self._defer_all(plans, tail)
 
     # -------------------------------------------------------------- lookups
     def _flush_lookups(self, lookups) -> None:
@@ -313,15 +448,19 @@ class BatchedKernelBackend(MatchBackend):
             klo, khi, vlo, vhi, q, m, randomized=True,
             key_ids=kids, key_seeds=kseeds, row_block=self.lookup_block,
             use_kernel=self.use_kernel, interpret=self.interpret)
-        bm = np.asarray(bm)[:n]
-        val = np.asarray(val)[:n]
-        slots = np.asarray(slots)[:n]
 
         self.stats.kernel_launches += 1
         self.stats.lookups += n
         self.stats.staged_pages += len(set(key_addrs) | set(val_addrs))
         self.stats.staged_queries += n
-        resolve_lookup_responses(self.chips, lookups, bm, val, slots)
+        snap = snapshot_parities(self.chips, val_addrs)
+
+        def tail(bm=bm, val=val, slots=slots, lookups=lookups, n=n,
+                 snap=snap):
+            self.stats.result_bytes += resolve_lookup_responses(
+                self.chips, lookups, np.asarray(bm)[:n],
+                np.asarray(val)[:n], np.asarray(slots)[:n], snap)
+        self._defer_all(lookups, tail)
 
     # -------------------------------------------------------------- gathers
     def _flush_gathers(self, gathers) -> None:
@@ -339,7 +478,11 @@ class BatchedKernelBackend(MatchBackend):
                                   page_block=self.page_block,
                                   interpret=self.interpret,
                                   use_kernel=self.use_kernel)
-        out = np.asarray(out)[:n]              # (R, 64, 16) uint32
         self.stats.kernel_launches += 1
         self.stats.gathers += n
-        resolve_gather_responses(self.chips, gathers, out)
+        snap = snapshot_parities(self.chips, addrs)
+
+        def tail(out=out, gathers=gathers, n=n, snap=snap):
+            self.stats.result_bytes += resolve_gather_responses(
+                self.chips, gathers, np.asarray(out)[:n], snap)
+        self._defer_all(gathers, tail)

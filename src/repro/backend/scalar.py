@@ -9,13 +9,20 @@ A queued LOOKUP executes as the paper's §V-A command pair — a key-page
 search followed by a gather of the first matching user slot's chunk on the
 paired value page — through the same chip model, so it is the bit-exact
 oracle for the batched backend's fused single-launch lookup path.
+A queued PLAN executes as the per-pass split: one chip search per
+include/exclude pass, OR/AND-NOT combined on the controller — the
+bit-exact reference for the fused in-latch ``sim_plan`` kernel.
+``BackendStats.result_bytes`` still counts only the combined 64 B bitmap
+per plan (what a SiM chip would transmit), not the per-pass payloads.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
-from repro.core.commands import Command, LookupResponse, Op
+from repro.core.bits import (SLOTS_PER_CHUNK, popcount_words, unpack_bitmap)
+from repro.core.commands import (Command, LookupResponse, Op,
+                                 SearchResponse)
+from repro.core.ecc import OpenVerdict
 from repro.core.engine import SimChipArray
 from repro.core.page import mask_header_slots
 
@@ -44,6 +51,13 @@ class ScalarBackend(MatchBackend):
         self._queue.append(("lookup", cmd, t))
         return t
 
+    def submit_plan(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.PLAN or cmd.plan_include is None:
+            raise ValueError(f"not a plan command: {cmd}")
+        t = Ticket(self)
+        self._queue.append(("plan", cmd, t))
+        return t
+
     @property
     def pending(self) -> int:
         return len(self._queue)
@@ -57,12 +71,50 @@ class ScalarBackend(MatchBackend):
             if kind == "search":
                 ticket._resolve(self.chips.search(cmd))
                 self.stats.searches += 1
+                self.stats.result_bytes += 64
             elif kind == "lookup":
-                ticket._resolve(self._lookup(cmd))
+                resp = self._lookup(cmd)
+                ticket._resolve(resp)
                 self.stats.lookups += 1
+                self.stats.result_bytes += 64 + (64 if resp.value_slot
+                                                 is not None else 0)
+            elif kind == "plan":
+                ticket._resolve(self._plan(cmd))
+                self.stats.plans += 1
+                self.stats.result_bytes += 64      # the combined bitmap only
             else:
-                ticket._resolve(self.chips.gather(cmd))
+                resp = self.chips.gather(cmd)
+                ticket._resolve(resp)
                 self.stats.gathers += 1
+                self.stats.result_bytes += 64 * len(resp.chunk_ids)
+
+    # Open-verdict severity, worst-wins across a plan's passes.
+    _VERDICT_RANK = {v.value: i for i, v in enumerate((
+        OpenVerdict.CLEAN, OpenVerdict.CLEAN_NEEDS_REFRESH,
+        OpenVerdict.FALLBACK_ECC, OpenVerdict.UNCORRECTABLE))}
+
+    def _plan(self, cmd: Command) -> SearchResponse:
+        """Per-pass split reference for Op.PLAN: one full chip search per
+        include/exclude pass, combined OR-then-AND-NOT exactly as the
+        latch accumulation would (paper Fig 10).  Reports the worst
+        (most severe) open verdict any pass saw."""
+        acc = np.zeros(16, dtype=np.uint32)
+        verdict = OpenVerdict.CLEAN.value
+        for q, mk in cmd.plan_include:
+            r = self.chips.search(Command(Op.SEARCH, cmd.page_addr,
+                                          query=q, mask=mk))
+            acc |= r.bitmap_words
+            verdict = max(verdict, r.open_verdict,
+                          key=self._VERDICT_RANK.__getitem__)
+        for q, mk in cmd.plan_exclude:
+            r = self.chips.search(Command(Op.SEARCH, cmd.page_addr,
+                                          query=q, mask=mk))
+            acc &= ~r.bitmap_words
+            verdict = max(verdict, r.open_verdict,
+                          key=self._VERDICT_RANK.__getitem__)
+        return SearchResponse(bitmap_words=acc,
+                              match_count=int(popcount_words(acc).sum()),
+                              open_verdict=verdict)
 
     def _lookup(self, cmd: Command) -> LookupResponse:
         resp = self.chips.search(Command(Op.SEARCH, cmd.page_addr,

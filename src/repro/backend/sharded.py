@@ -35,6 +35,18 @@ in a single device dispatch per phase:
     chip ride one row-stacked launch; the key and value page of one lookup
     may live on different chips (the §V-A cross-die pairing).
   * gathers — same row stacking through one ``sim_gather`` launch.
+  * plans (Op.PLAN) — each chip's unique pages and unique
+    (include, exclude) pass tuples dedup per chip (plan dedup, mirroring
+    the query dedup) and stack into ONE vmapped ``sim_plan`` launch; the
+    OR/AND-NOT combine happens in-kernel (the in-latch Fig 10 dataflow),
+    so the timeline charges ``n_passes`` match ops but only 64 B of
+    match-mode bus payload per page — not 64 B per pass per page.
+
+Ticket resolution is lazy (see base.py/batched.py): every flush phase
+keeps its launch outputs device-resident and the host tail runs at the
+first ``result()`` of the burst, overlapping staging of the next burst
+with device compute of this one.  Timeline accounting stays at flush time
+— simulated SSD time is independent of when the host drains results.
 
 Timeline coupling.  Pass ``timeline=`` (or ``timeline=True``) to attach a
 ``flash.timeline.BurstTimeline``: every flush reports per-chip batch sizes
@@ -60,12 +72,16 @@ from repro.flash.timeline import BurstTimeline, ChipBurst
 from repro.kernels.layout import planes_to_chunk_words_xp
 from repro.kernels.sim_fused.ops import sim_fused_lookup
 from repro.kernels.sim_gather.ops import sim_gather
+from repro.kernels.sim_plan.ops import plan_pass_rows
+from repro.kernels.sim_plan.ref import sim_plan_ref
+from repro.kernels.sim_plan.sim_plan import sim_plan_kernel
 from repro.kernels.sim_search.ref import sim_search_ref
 from repro.kernels.sim_search.sim_search import sim_search_kernel
 
 from .base import MatchBackend, Ticket
 from .batched import (resolve_gather_responses, resolve_lookup_responses,
-                      resolve_search_responses)
+                      resolve_plan_responses, resolve_search_responses,
+                      snapshot_parities)
 from .planestore import PlaneStore, next_pow2, padded_rows
 
 QUERY_BYTES = 16               # (query, mask) uint32 pairs shipped per search
@@ -97,6 +113,24 @@ def _stacked_search(lo, hi, q, m, ids, seeds, *, page_block: int,
             return sim_search_ref(lo, hi, q, m, randomized=True,
                                   page_ids=ids, page_seeds=seeds)
     return jax.vmap(one_chip)(lo, hi, q, m, ids, seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("page_block", "use_kernel",
+                                             "interpret"))
+def _stacked_plan(lo, hi, q, m, f, ids, seeds, *, page_block: int,
+                  use_kernel: bool, interpret: bool):
+    """One vmapped fused-plan launch over the chip axis: (C, N, 512)
+    planes x (C, G, P, 2) pass rows -> (C, G, N, 16) combined bitmaps."""
+    if use_kernel:
+        def one_chip(lo, hi, q, m, f, ids, seeds):
+            return sim_plan_kernel(lo, hi, q, m, f, page_block=page_block,
+                                   randomized=True, interpret=interpret,
+                                   page_ids=ids, page_seeds=seeds)
+    else:
+        def one_chip(lo, hi, q, m, f, ids, seeds):
+            return sim_plan_ref(lo, hi, q, m, f, randomized=True,
+                                page_ids=ids, page_seeds=seeds)
+    return jax.vmap(one_chip)(lo, hi, q, m, f, ids, seeds)
 
 
 class ShardedSsdBackend(MatchBackend):
@@ -193,6 +227,11 @@ class ShardedSsdBackend(MatchBackend):
             raise ValueError(f"not a lookup command: {cmd}")
         return self._submit("lookup", cmd)
 
+    def submit_plan(self, cmd: Command) -> Ticket:
+        if cmd.op is not Op.PLAN or cmd.plan_include is None:
+            raise ValueError(f"not a plan command: {cmd}")
+        return self._submit("plan", cmd)
+
     @property
     def pending(self) -> int:
         return sum(len(q) for q in self._pending)
@@ -202,15 +241,17 @@ class ShardedSsdBackend(MatchBackend):
         if not any(self._pending):
             return
         self.stats.flushes += 1
-        searches, lookups, gathers = [], [], []
+        searches, lookups, gathers, plans = [], [], [], []
         for queue in self._pending:
             for kind, cmd, t in queue:
                 {"search": searches, "lookup": lookups,
-                 "gather": gathers}[kind].append((cmd, t))
+                 "gather": gathers, "plan": plans}[kind].append((cmd, t))
             queue.clear()
         bursts: dict[int, ChipBurst] = {}
         if searches:
             self._flush_searches(searches, bursts)
+        if plans:
+            self._flush_plans(plans, bursts)
         if lookups:
             self._flush_lookups(lookups, bursts)
         if gathers:
@@ -283,9 +324,9 @@ class ShardedSsdBackend(MatchBackend):
         if interp is None:
             from repro.kernels import default_interpret
             interp = default_interpret()
-        out = np.asarray(_stacked_search(
+        out = _stacked_search(
             lo, hi, q, m, ids, seeds, page_block=self.page_block,
-            use_kernel=self.use_kernel, interpret=interp))
+            use_kernel=self.use_kernel, interpret=interp)
 
         self.stats.kernel_launches += 1
         self.stats.staged_pages += len(flat)
@@ -300,9 +341,101 @@ class ShardedSsdBackend(MatchBackend):
             b.bus_match_bytes += BITMAP_BYTES
             b.pcie_bytes += BITMAP_BYTES + QUERY_BYTES
 
-        resolve_search_responses(
-            self.chips, searches,
-            [(slot_of[c], qi, pi) for c, qi, pi in placements], out)
+        stacked = [(slot_of[c], qi, pi) for c, qi, pi in placements]
+
+        def tail(out=out, searches=searches, stacked=stacked):
+            self.stats.result_bytes += resolve_search_responses(
+                self.chips, searches, stacked, np.asarray(out))
+        self._defer_all(searches, tail)
+
+    # --------------------------------------------------------------- plans
+    def _flush_plans(self, plans, bursts) -> None:
+        """Fused range plans, stacked across chips like searches.
+
+        Per chip: unique pages -> arena rows, unique (include, exclude)
+        pass tuples -> plan groups (the per-chip plan dedup mirroring the
+        query dedup).  ONE vmapped ``sim_plan`` launch evaluates every
+        chip's groups against its own resident pages.  On the simulated
+        bus a plan costs ``n_passes`` match ops but only ONE 64 B bitmap
+        per page — the in-latch accumulation (Fig 10) — where the per-pass
+        split path would cross 64 B per pass per page.
+        """
+        n = self.n_chips
+        addrs: list[list[int]] = [[] for _ in range(n)]
+        page_rows: list[dict[int, int]] = [{} for _ in range(n)]
+        group_rows: list[dict[tuple, int]] = [{} for _ in range(n)]
+        groups: list[list[tuple]] = [[] for _ in range(n)]
+        placements = []                        # (chip, gi, pi)
+        for cmd, _ in plans:
+            c, _local = self.decompose(cmd.page_addr)
+            if cmd.page_addr not in page_rows[c]:
+                page_rows[c][cmd.page_addr] = len(addrs[c])
+                addrs[c].append(cmd.page_addr)
+            key = (cmd.plan_include, cmd.plan_exclude)
+            if key not in group_rows[c]:
+                group_rows[c][key] = len(groups[c])
+                groups[c].append(key)
+            placements.append((c, group_rows[c][key],
+                               page_rows[c][cmd.page_addr]))
+
+        active = [c for c in range(n) if addrs[c]]
+        slot_of = {c: i for i, c in enumerate(active)}
+        n_pad = max(padded_rows(len(addrs[c]), self.page_block)
+                    for c in active)
+        g_pad = max(next_pow2(len(groups[c])) for c in active)
+        p_pad = next_pow2(max(max((len(i) + len(e) for i, e in groups[c]),
+                                  default=1) for c in active))
+        c_pad = next_pow2(len(active))
+
+        flat = [a for c in active for a in addrs[c]]
+        rows = self.store.rows_for(flat)
+        idx2d = np.zeros((c_pad, n_pad), np.int32)
+        off = 0
+        for i, c in enumerate(active):
+            k = len(addrs[c])
+            idx2d[i, :k] = rows[off:off + k]
+            off += k
+            chip = self.chips.chips[c]
+            chip.counters.array_reads += k     # one staged sense per page
+            b = self._burst(bursts, c)
+            b.senses += k
+            b.bus_match_bytes += OPEN_OVERHEAD_BYTES * k
+        lo, hi, ids, seeds = self.store.take2d(idx2d)
+        q = np.zeros((c_pad, g_pad, p_pad, 2), dtype=np.uint32)
+        m = np.zeros_like(q)
+        f = np.zeros((c_pad, g_pad, p_pad), dtype=np.uint32)
+        for i, c in enumerate(active):
+            for gi, (inc, exc) in enumerate(groups[c]):
+                q[i, gi], m[i, gi], f[i, gi] = plan_pass_rows(inc, exc,
+                                                              p_pad)
+
+        interp = self.interpret
+        if interp is None:
+            from repro.kernels import default_interpret
+            interp = default_interpret()
+        out = _stacked_plan(
+            lo, hi, q, m, f, ids, seeds, page_block=self.page_block,
+            use_kernel=self.use_kernel, interpret=interp)
+
+        self.stats.kernel_launches += 1
+        self.stats.staged_pages += len(flat)
+        self.stats.staged_queries += sum(len(i) + len(e)
+                                         for c in active
+                                         for i, e in groups[c])
+        self.stats.plans += len(plans)
+        for cmd, _ in plans:
+            c, _local = self.decompose(cmd.page_addr)
+            b = self._burst(bursts, c)
+            b.matches += cmd.n_passes          # every pass matches on-die
+            b.bus_match_bytes += BITMAP_BYTES  # ...but ONE bitmap crosses
+            b.pcie_bytes += BITMAP_BYTES + QUERY_BYTES * cmd.n_passes
+
+        stacked = [(slot_of[c], gi, pi) for c, gi, pi in placements]
+
+        def tail(out=out, plans=plans, stacked=stacked):
+            self.stats.result_bytes += resolve_plan_responses(
+                self.chips, plans, stacked, np.asarray(out))
+        self._defer_all(plans, tail)
 
     # -------------------------------------------------------------- lookups
     def _flush_lookups(self, lookups, bursts) -> None:
@@ -344,8 +477,15 @@ class ShardedSsdBackend(MatchBackend):
             vb = self._burst(bursts, vc)
             vb.bus_match_bytes += CHUNK_BYTES
             vb.pcie_bytes += CHUNK_BYTES
-        resolve_lookup_responses(self.chips, lookups, np.asarray(bm)[:n],
-                                 np.asarray(val)[:n], np.asarray(slots)[:n])
+
+        snap = snapshot_parities(self.chips, val_addrs)
+
+        def tail(bm=bm, val=val, slots=slots, lookups=lookups, n=n,
+                 snap=snap):
+            self.stats.result_bytes += resolve_lookup_responses(
+                self.chips, lookups, np.asarray(bm)[:n],
+                np.asarray(val)[:n], np.asarray(slots)[:n], snap)
+        self._defer_all(lookups, tail)
 
     # -------------------------------------------------------------- gathers
     def _flush_gathers(self, gathers, bursts) -> None:
@@ -365,7 +505,12 @@ class ShardedSsdBackend(MatchBackend):
                                   use_kernel=self.use_kernel)
         self.stats.kernel_launches += 1
         self.stats.gathers += n
-        resolve_gather_responses(self.chips, gathers, np.asarray(out)[:n])
+        snap = snapshot_parities(self.chips, addrs)
+
+        def tail(out=out, gathers=gathers, n=n, snap=snap):
+            self.stats.result_bytes += resolve_gather_responses(
+                self.chips, gathers, np.asarray(out)[:n], snap)
+        self._defer_all(gathers, tail)
         for cmd, _ in gathers:
             c, _local = self.decompose(cmd.page_addr)
             k = int(popcount_words(

@@ -22,6 +22,7 @@ class Op(enum.Enum):
     SEARCH = "search"
     GATHER = "gather"
     LOOKUP = "lookup"           # fused search + same-slot value gather
+    PLAN = "plan"               # multi-pass range plan, combined in-latch
     READ_FULL = "read_full"     # storage-mode full-page read (baseline path)
     PROGRAM = "program"         # storage-mode page program
     ERASE = "erase"
@@ -39,6 +40,13 @@ class Command:
     # lookup operand: the paired value page whose same-slot chunk is
     # gathered after the key-page search (paper §V-A paired pages)
     value_page: int | None = None
+    # plan operands (Op.PLAN): pass rows as ((q_lo, q_hi), (m_lo, m_hi))
+    # uint32 pair tuples.  The chip ORs the include passes, AND-NOTs the
+    # exclude passes in-latch (paper Fig 10) and transmits ONE combined
+    # 64 B bitmap — never the per-pass bitmaps.  Tuples (not lists) so a
+    # plan is hashable and backends can dedup identical plans in a burst.
+    plan_include: tuple = None
+    plan_exclude: tuple = None
     # scheduling metadata
     submit_ns: int = 0
     deadline_ns: int = 0
@@ -63,6 +71,27 @@ class Command:
         return Command(Op.LOOKUP, key_page, query=u64_to_pair(query_u64),
                        mask=u64_to_pair(mask_u64), value_page=value_page,
                        **kw)
+
+    @staticmethod
+    def plan(page_addr: int, include, exclude=(), **kw) -> "Command":
+        """Multi-pass range plan (paper Fig 10, §V-C): OR over ``include``
+        passes, AND-NOT over ``exclude`` passes, accumulated in the chip's
+        latches; one combined bitmap crosses the bus instead of one per
+        pass.  Items are ``(query_u64, mask_u64)`` pairs or any object
+        with ``query``/``mask`` attributes (``range_query.MaskedQuery``)."""
+        def _pairs(items):
+            out = []
+            for it in items:
+                q, mk = (it.query, it.mask) if hasattr(it, "query") else it
+                out.append((u64_to_pair(q), u64_to_pair(mk)))
+            return tuple(out)
+        return Command(Op.PLAN, page_addr, plan_include=_pairs(include),
+                       plan_exclude=_pairs(exclude), **kw)
+
+    @property
+    def n_passes(self) -> int:
+        """Match passes a PLAN command executes on-chip."""
+        return len(self.plan_include or ()) + len(self.plan_exclude or ())
 
     @staticmethod
     def page_open(page_addr: int, **kw) -> "Command":

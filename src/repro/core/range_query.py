@@ -71,12 +71,34 @@ def evaluate_plan_on_pages(backend: "MatchBackend", plan: RangePlan,
                            page_addrs: Sequence[int]) -> np.ndarray:
     """Run a RangePlan over many pages through a MatchBackend.
 
-    Every (page x pass) search command is submitted up front and the
-    backend flushed once, so the whole plan executes as a single batched
-    launch on the kernel backend (§IV-E) instead of n_passes * n_pages
-    per-page commands.  Returns the combined (len(page_addrs), 16) uint32
-    slot bitmaps: OR over include passes, AND-NOT over exclude passes
-    (paper Fig 10).
+    ONE ``Op.PLAN`` command per page, flushed together: the backend's
+    fused plan path (``kernels/sim_plan`` on the kernel backends, the
+    per-pass split reference on scalar) accumulates OR over include
+    passes and AND-NOT over exclude passes *in-latch* (paper Fig 10) and
+    ships one combined 64 B bitmap per page — device->host result bytes
+    shrink by the pass count versus the per-pass path
+    (:func:`evaluate_plan_per_pass`).  Returns the combined
+    (len(page_addrs), 16) uint32 slot bitmaps.
+    """
+    tickets = [backend.submit_plan(Command.plan(p, plan.include,
+                                                plan.exclude))
+               for p in page_addrs]
+    backend.flush()
+    out = np.zeros((len(page_addrs), 16), dtype=np.uint32)
+    for i, t in enumerate(tickets):
+        out[i] = t.result().bitmap_words
+    return out
+
+
+def evaluate_plan_per_pass(backend: "MatchBackend", plan: RangePlan,
+                           page_addrs: Sequence[int]) -> np.ndarray:
+    """The pre-PLAN split path: one SEARCH per (page, pass), one flush,
+    per-pass bitmaps combined on the host.
+
+    Kept as the bit-exactness reference for ``Op.PLAN``
+    (tests/test_plan_backend.py) and as the baseline the kernel_micro
+    ``range_plan`` section measures the fused kernel against — this path
+    crosses 64 B per pass per page where PLAN crosses 64 B per page.
     """
     include = [[backend.submit_search(Command.search(p, mq.query, mq.mask))
                 for mq in plan.include] for p in page_addrs]

@@ -18,7 +18,11 @@ Accounting model (per paper §III-B/§IV-E, mirrored from SSDSim.read_sim):
   * every unique page a chip's burst touches costs one array sense on that
     chip's die timeline (the page open), amortized over all of the chip's
     queued queries — the §IV-E batch-matching amortization;
-  * match ops serialize on the die after its senses (t_match each);
+  * match ops serialize on the die after its senses (t_match each).  A
+    fused range plan (Op.PLAN) charges one match op per include/exclude
+    pass — the latches still evaluate every pass — but only ONE 64 B
+    combined bitmap per page on the bus (the in-latch Fig 10 accumulation);
+    the per-pass split path would cross 64 B per pass per page;
   * match-mode payloads (open verification transfers, 64 B bitmaps, 64 B
     gathered chunks) share the chip's *channel* bus timeline, so chips on
     one channel contend while chips on different channels overlap — the

@@ -139,8 +139,9 @@ class SimBTree:
 
     # --------------------------------------------------------------- range
     def range_query(self, lo: int, hi: int) -> list[tuple[int, int]]:
-        """lo <= key < hi via the §V-C masked-equality decomposition: all
-        (leaf x pass) searches flush as one batch, then all key/value-page
+        """lo <= key < hi via the §V-C masked-equality decomposition: one
+        ``Op.PLAN`` per touched leaf flushes as one batch (the passes
+        accumulate in-latch, 64 B/leaf on the bus), then all key/value-page
         gathers flush as a second batch."""
         plan = exact_range(int(lo), int(hi), width=64)
         i0 = max(bisect.bisect_right(self._separators, int(lo)) - 1, 0)
@@ -149,8 +150,8 @@ class SimBTree:
             return []
         bitmaps = evaluate_plan_on_pages(
             self.backend, plan, [leaf.key_page for leaf in leaves])
-        self.stats.searches += plan.n_passes * len(leaves)
-        self.stats.bitmap_bytes += 64 * plan.n_passes * len(leaves)
+        self.stats.searches += plan.n_passes * len(leaves)  # on-chip matches
+        self.stats.bitmap_bytes += 64 * len(leaves)         # combined bitmaps
 
         hits = []                      # (leaf, slots, key ticket, val ticket)
         for leaf, acc in zip(leaves, bitmaps):

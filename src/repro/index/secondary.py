@@ -5,10 +5,13 @@ column predicate becomes one masked search per page (point) or the §V-C
 range plan (range); gather returns only the matching encoded rows, from
 which the host decodes e.g. the user id.
 
-Predicates execute through a MatchBackend: every page's search commands are
+Predicates execute through a MatchBackend: every page's plan command is
 enqueued and flushed together, so a table scan is one batched launch (and
 one follow-up gather launch) on the kernel backend instead of a per-page
-command loop.  Sequential page allocation stripes the table across a
+command loop.  Range predicates ride ``Op.PLAN`` — the multi-pass §V-C
+decomposition accumulates OR/AND-NOT in-latch (Fig 10) and only the
+combined 64 B bitmap per page crosses the bus, independent of pass count.
+Sequential page allocation stripes the table across a
 ``ShardedSsdBackend``'s channels x dies, so a full-table predicate is the
 best case for the stacked launch: every chip matches its own shard of the
 table in parallel within ONE device dispatch.
@@ -107,14 +110,17 @@ class SimSecondaryIndex:
                      exact: bool = True) -> np.ndarray:
         """Fig 10: lo <= column < hi via the masked-equality range plan.
 
-        With ``exact=False`` the one-pass-per-bound approximate plan is used
-        and the (superset) result is refined on the host — the workflow the
+        The whole predicate is ONE ``Op.PLAN`` per page: all passes
+        accumulate in-latch and 64 B per page crosses the bus, no matter
+        how many passes the decomposition needs.  With ``exact=False``
+        the one-pass-per-bound approximate plan is used and the
+        (superset) result is refined on the host — the workflow the
         paper proposes for analytical scans.
         """
         plan: RangePlan = self.codec.range(column, lo, hi, exact=exact)
         bitmaps = evaluate_plan_on_pages(self.backend, plan,
                                          self._page_addrs())
-        self.io_bitmap_bytes += 64 * plan.n_passes * self.n_pages
+        self.io_bitmap_bytes += 64 * self.n_pages   # combined, pass-free
         got = self._collect_pages(bitmaps)
         if not exact and got.size:
             vals = self.codec.decode_rows(got, column)

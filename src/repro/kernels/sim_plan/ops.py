@@ -1,0 +1,66 @@
+"""Public wrapper for the SiM fused plan kernel: layout, padding, fallback."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.sim_search.ops import _pad_pages
+
+from .ref import sim_plan_ref
+from .sim_plan import PASS_EXCLUDE, PASS_INCLUDE, sim_plan_kernel
+
+
+def plan_pass_rows(include, exclude, n_passes: int):
+    """Dense (P, 2)/(P, 2)/(P,) pass operands from a plan's pass pairs.
+
+    ``include``/``exclude`` are sequences of ``((q_lo, q_hi), (m_lo, m_hi))``
+    uint32 pair tuples (the ``Command.plan`` wire format); rows past the
+    real passes are PASS_PAD and contribute to neither accumulator.
+    """
+    if n_passes < len(include) + len(exclude):
+        raise ValueError((n_passes, len(include), len(exclude)))
+    q = np.zeros((n_passes, 2), dtype=np.uint32)
+    m = np.zeros_like(q)
+    f = np.zeros(n_passes, dtype=np.uint32)
+    for i, (qp, mp) in enumerate(include):
+        q[i], m[i], f[i] = qp, mp, PASS_INCLUDE
+    base = len(include)
+    for i, (qp, mp) in enumerate(exclude):
+        q[base + i], m[base + i], f[base + i] = qp, mp, PASS_EXCLUDE
+    return q, m, f
+
+
+def sim_plan(lo, hi, queries, masks, flags, *, page_block: int = 8,
+             randomized: bool = False, device_seed: int = 0,
+             page_base: int = 0, interpret: bool | None = None,
+             use_kernel: bool = True, page_ids=None, page_seeds=None):
+    """Fused multi-pass plan evaluation -> (G, N, 16) combined bitmaps.
+
+    One launch evaluates G plan groups (each up to P passes, include OR /
+    exclude AND-NOT accumulated in-VMEM, paper Fig 10) against N pages and
+    returns ONE combined bitmap per (group, page) — the result payload
+    shrinks by the pass count versus per-pass ``sim_search``.
+    ``use_kernel=False`` routes through the jnp oracle.
+    """
+    queries = jnp.asarray(queries, jnp.uint32)
+    masks = jnp.asarray(masks, jnp.uint32)
+    flags = jnp.asarray(flags, jnp.uint32)
+    if queries.ndim == 2:                  # single plan group convenience
+        queries, masks, flags = queries[None], masks[None], flags[None]
+    if not use_kernel:
+        return sim_plan_ref(lo, hi, queries, masks, flags,
+                            randomized=randomized, page_base=page_base,
+                            device_seed=device_seed, page_ids=page_ids,
+                            page_seeds=page_seeds)
+    interpret = default_interpret() if interpret is None else interpret
+    lo, hi, page_ids, page_seeds, n = _pad_pages(
+        jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32), page_block,
+        page_ids, page_seeds)
+    out = sim_plan_kernel(lo, hi, queries, masks, flags,
+                          page_block=page_block, randomized=randomized,
+                          device_seed=device_seed, page_base=page_base,
+                          interpret=interpret, page_ids=page_ids,
+                          page_seeds=page_seeds)
+    return out[:, :n]

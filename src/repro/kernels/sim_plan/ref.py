@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the sim_plan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import pack_bitmap
+from repro.kernels.sim_search.ref import stream_planes
+
+from .sim_plan import PASS_EXCLUDE, PASS_INCLUDE
+
+
+def sim_plan_ref(lo, hi, queries, masks, flags, *, randomized: bool = False,
+                 page_base: int = 0, device_seed: int = 0,
+                 page_ids=None, page_seeds=None) -> jnp.ndarray:
+    """Reference fused range-plan evaluation.
+
+    lo, hi:   (N, 512) uint32 slot-word planes (possibly randomized)
+    queries:  (G, P, 2) uint32 pass rows;  masks: (G, P, 2) uint32
+    flags:    (G, P) uint32 — PASS_INCLUDE / PASS_EXCLUDE / PASS_PAD
+    returns:  (G, N, 16) uint32 combined bitmaps (OR includes, AND-NOT
+              excludes — paper Fig 10)
+    """
+    lo = jnp.asarray(lo, dtype=jnp.uint32)
+    hi = jnp.asarray(hi, dtype=jnp.uint32)
+    q = jnp.asarray(queries, dtype=jnp.uint32)       # (G, P, 2)
+    m = jnp.asarray(masks, dtype=jnp.uint32)
+    f = jnp.asarray(flags, dtype=jnp.uint32)         # (G, P)
+    if randomized:
+        s_lo, s_hi = stream_planes(page_base, lo.shape[0], device_seed,
+                                   page_ids=page_ids, page_seeds=page_seeds)
+        q_lo = q[..., 0][:, :, None, None] ^ s_lo[None, None]  # (G, P, N, 512)
+        q_hi = q[..., 1][:, :, None, None] ^ s_hi[None, None]
+    else:
+        q_lo = q[..., 0][:, :, None, None]
+        q_hi = q[..., 1][:, :, None, None]
+    mm = ((lo[None, None] ^ q_lo) & m[..., 0][:, :, None, None]) | (
+        (hi[None, None] ^ q_hi) & m[..., 1][:, :, None, None])
+    bits = (mm == 0).astype(jnp.uint32)              # (G, P, N, 512)
+    is_inc = (f == PASS_INCLUDE).astype(jnp.uint32)[..., None, None]
+    is_exc = (f == PASS_EXCLUDE).astype(jnp.uint32)[..., None, None]
+    inc = (bits & is_inc).max(axis=1)                # (G, N, 512)
+    exc = (bits & is_exc).max(axis=1)
+    return pack_bitmap(inc & ~exc, xp=jnp)           # (G, N, 16)
+
+
+def sim_plan_ref_np(lo, hi, queries, masks, flags, **kw) -> np.ndarray:
+    return np.asarray(sim_plan_ref(lo, hi, queries, masks, flags, **kw))

@@ -37,6 +37,7 @@ from repro.backend import as_backend
 from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
 from repro.core.commands import Command
 from repro.core.page import mask_header_slots
+from repro.core.range_query import evaluate_plan_on_pages, exact_range
 from repro.flash.params import FlashParams
 from repro.flash.ssd import SSDSim
 from .ycsb import KEYS_PER_PAGE, Workload, value_page_of
@@ -72,6 +73,12 @@ class FunctionalRunResult:
     flushes: int              # backend flushes issued by the executor
     kernel_launches: int      # device launches (0 on the scalar backend)
     staged_bytes: int = 0     # host->device page bytes (0 on scalar)
+    result_bytes: int = 0     # exact device->host result payload bytes
+    # YCSB-E scans (op 2): matched-key count per scan op, 0 elsewhere.
+    # Each scan replays as one Op.PLAN per key page (fused in-latch range
+    # evaluation) and must be bit-identical across backends.
+    scan_counts: np.ndarray | None = None
+    n_scans: int = 0
     # Timeline coupling (sharded backend with a BurstTimeline attached):
     # simulated SSD time/energy for the replayed op stream, so fig14/15-
     # style latency distributions come out of the *functional* run too.
@@ -92,10 +99,18 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
     ``fused=False`` the burst's searches flush as one batch, then its value
     gathers as a second — two kernel launches on the batched backend.  With
     ``fused=True`` every read becomes a ``submit_lookup`` and the whole
-    burst resolves in one fused launch, no host bitmap decode in between.
+    burst resolves in one fused launch, no host bitmap decode in between;
+    lazy tickets keep each burst's outputs device-resident until the NEXT
+    burst has been flushed, so host staging and device compute of adjacent
+    bursts overlap (the depth-1 pipeline — results are position-tagged, so
+    replay stays bit-identical).
     A write flushes the open burst first (read-your-writes), updates the
     host mirror and reprograms the value page through the backend — which
     invalidates exactly that page's row in the device-resident plane store.
+    A scan op (YCSB-E, ``ops == 2``) replays as ONE ``Op.PLAN`` per key
+    page the scanned range touches: the §V-C exact-range decomposition
+    evaluates fused in-latch and 64 B per page crosses back, regardless
+    of the plan's pass count.
     """
     if workload.keys is None:
         raise ValueError("workload has no key stream "
@@ -122,11 +137,33 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
     n = len(workload.ops)
     out = np.zeros(n, dtype=np.uint64)
     hits = np.zeros(n, dtype=bool)
+    scan_counts = np.zeros(n, dtype=np.int64)
     flushes = 0
+    n_scans = 0
     pending: list[int] = []                 # op indices of queued reads
+    inflight: list[list] = []               # flushed, not-yet-drained bursts
+
+    def drain(lookups) -> None:
+        for qi, t in lookups:
+            r = t.result()
+            if r.value_slot is None:
+                continue
+            out[qi] = int.from_bytes(r.value, "little")
+            hits[qi] = True
+
+    def drain_inflight() -> None:
+        while inflight:
+            drain(inflight.pop(0))
 
     def resolve_burst_fused() -> None:
-        """One submit_lookup per read: the whole burst is ONE launch."""
+        """One submit_lookup per read: the whole burst is ONE launch.
+
+        With lazy tickets the flush only *dispatches* the launch; this
+        burst's host tail is deferred until the NEXT burst has been
+        flushed (depth-1 pipeline), so staging of burst k+1 overlaps
+        device compute of burst k.  Results are position-tagged, so the
+        deferred drain is order-independent and bit-identical.
+        """
         nonlocal flushes
         if not pending:
             return
@@ -137,12 +174,9 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         pending.clear()
         backend.flush()
         flushes += 1
-        for qi, t in lookups:
-            r = t.result()
-            if r.value_slot is None:
-                continue
-            out[qi] = int.from_bytes(r.value, "little")
-            hits[qi] = True
+        inflight.append(lookups)
+        while len(inflight) > 1:
+            drain(inflight.pop(0))
 
     def resolve_burst_split() -> None:
         """Search launch, host bitmap decode, then gather launch."""
@@ -178,6 +212,37 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
 
     resolve_burst = resolve_burst_fused if fused else resolve_burst_split
 
+    def run_scan(qi: int) -> None:
+        """YCSB-E scan: ONE Op.PLAN per touched key page, fused in-latch.
+
+        Scans key ids [k, k + len); stored key of id k is k + 1, and ids
+        are laid out contiguously (page p holds ids [p*504, (p+1)*504)),
+        so the plan only needs the pages overlapping the stored-key range
+        [lo, hi) — at most ceil(len/504) + 1 of them.  Key pages are
+        never reprogrammed, so a scan needs no ordering against the write
+        stream — only the open read burst is resolved first so the plan
+        flush stays a dedicated launch.
+        """
+        nonlocal flushes, n_scans
+        resolve_burst()
+        k = int(workload.keys[qi])
+        lo = k + 1
+        hi = min(lo + int(workload.scan_lens[qi]), n_keys + 1)
+        if lo >= hi:
+            return
+        p0 = (lo - 1) // KEYS_PER_PAGE     # page of stored key lo
+        p1 = (hi - 2) // KEYS_PER_PAGE     # page of stored key hi - 1
+        bitmaps = evaluate_plan_on_pages(
+            backend, exact_range(lo, hi, width=64),
+            list(range(p0, min(p1, n_key_pages - 1) + 1)))
+        flushes += 1
+        total = 0
+        for bm in bitmaps:
+            bits = unpack_bitmap(mask_header_slots(bm), 512)
+            total += int(bits.sum())
+        scan_counts[qi] = total
+        n_scans += 1
+
     n_reads = n_writes = 0
     for qi in range(n):
         if workload.ops[qi] == 0:
@@ -185,6 +250,8 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
             pending.append(qi)
             if len(pending) >= burst:
                 resolve_burst()
+        elif workload.ops[qi] == 2:
+            run_scan(qi)
         else:
             n_writes += 1
             resolve_burst()                 # read-your-writes ordering
@@ -195,11 +262,14 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
             backend.program_entries(value_page_of(p, n_key_pages),
                                     values[s:s + KEYS_PER_PAGE])
     resolve_burst()
+    drain_inflight()
     result = FunctionalRunResult(
         read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
         flushes=flushes,
         kernel_launches=backend.stats.kernel_launches,
-        staged_bytes=backend.stats.staged_bytes)
+        staged_bytes=backend.stats.staged_bytes,
+        result_bytes=backend.stats.result_bytes,
+        scan_counts=scan_counts if n_scans else None, n_scans=n_scans)
     if timeline is not None:
         result.burst_latencies_ns = np.asarray(timeline.burst_latencies)
         result.write_latencies_ns = np.asarray(timeline.write_latencies)

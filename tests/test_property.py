@@ -104,3 +104,104 @@ def test_kernel_ref_agrees_with_core_match(n_pages, seed):
             expect = search_page(words, u64_array_to_pairs(q64)[qi],
                                  u64_array_to_pairs(m64)[qi])
             np.testing.assert_array_equal(out[qi, p], expect)
+
+
+# ---------------------------------------------------------------------------
+# core/range_query: the §V-C masked-equality decompositions.
+# ---------------------------------------------------------------------------
+
+range_widths = st.sampled_from([4, 8, 12, 16, 32, 48, 64])
+
+
+@st.composite
+def lo_hi_width(draw):
+    width = draw(range_widths)
+    hi = draw(st.integers(1, (1 << width)))
+    lo = draw(st.integers(0, hi - 1))
+    return lo, hi, width
+
+
+@settings(max_examples=120, deadline=None)
+@given(lo_hi_width(), st.integers(0, 2**32 - 1))
+def test_exact_range_agrees_with_direct_evaluation(lhw, seed):
+    """exact_range's prefix-block decomposition == lo <= k < hi, for random
+    keys drawn across the field width (boundary keys forced in)."""
+    from repro.core.range_query import exact_range
+    lo, hi, width = lhw
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 1 << min(width, 63), size=200,
+                        dtype=np.uint64)
+    edges = [lo, hi - 1, max(lo - 1, 0), min(hi, (1 << width) - 1)]
+    keys[:len(edges)] = np.array(edges, dtype=np.uint64)
+    plan = exact_range(lo, hi, width=width)
+    got = plan.evaluate(keys)
+    # k < hi compared as k <= hi - 1: hi may be 2**64, which uint64 can't
+    # represent, but hi - 1 always fits.
+    want = (keys >= np.uint64(lo)) & (keys <= np.uint64(hi - 1))
+    np.testing.assert_array_equal(got, want)
+    # ...and the pass count respects the trie bound of §V-C.
+    assert 1 <= plan.n_passes <= max(2 * width - 2, 1)
+
+
+@settings(max_examples=120, deadline=None)
+@given(lo_hi_width(), st.integers(0, 2**32 - 1))
+def test_approximate_range_is_superset_of_true_range(lhw, seed):
+    """The one-pass-per-bound approximate plan never drops a true match
+    (superset semantics) and never admits a key outside the covered
+    power-of-two envelope."""
+    from repro.core.range_query import approximate_range
+    lo, hi, width = lhw
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 1 << min(width, 63), size=200, dtype=np.uint64)
+    keys[:2] = np.array([lo, hi - 1], dtype=np.uint64)
+    plan = approximate_range(lo, hi, width=width)
+    got = plan.evaluate(keys)
+    # k <= hi - 1 form: hi == 2**64 overflows uint64, hi - 1 never does.
+    true = (keys >= np.uint64(lo)) & (keys <= np.uint64(hi - 1))
+    assert (got | ~true).all()               # true range -> matched
+    ub_bits = max(int(hi - 1).bit_length(), 0)
+    lb = (1 << (int(lo).bit_length() - 1)) if lo > 0 else 0
+    envelope = (keys < np.uint64(1 << ub_bits)) & (keys >= np.uint64(lb)) \
+        if ub_bits < 64 else keys >= np.uint64(lb)
+    np.testing.assert_array_equal(got, envelope)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 10), st.data())
+def test_false_positive_bound_holds_on_uniform_keys(width, data):
+    """Enumerating the full uniform keyspace of a small field, the
+    measured superset blow-up of the approximate plan equals (and so never
+    exceeds) false_positive_bound."""
+    from repro.core.range_query import (approximate_range, exact_range,
+                                        false_positive_bound)
+    hi = data.draw(st.integers(2, 1 << width), label="hi")
+    lo = data.draw(st.integers(0, hi - 1), label="lo")
+    keys = np.arange(1 << width, dtype=np.uint64)
+    plan = approximate_range(lo, hi, width=width)
+    matched = int(plan.evaluate(keys).sum())
+    true = hi - lo
+    blowup = matched / true - 1.0
+    bound = false_positive_bound(plan, lo, hi, width=width)
+    assert blowup <= bound + 1e-12
+    assert false_positive_bound(exact_range(lo, hi, width=width),
+                                lo, hi, width=width) == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 40), st.integers(2, 16), st.data(),
+       st.integers(0, 2**32 - 1))
+def test_shifted_field_decomposition_ignores_other_bits(shift, width, data,
+                                                        seed):
+    """A range plan on a BitWeaving field (shift, width) must test ONLY
+    that field: random garbage in the other bit positions never changes
+    membership."""
+    from repro.core.range_query import exact_range
+    shift = min(shift, 64 - width)
+    hi = data.draw(st.integers(1, 1 << width), label="hi")
+    lo = data.draw(st.integers(0, hi - 1), label="lo")
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**63, size=150, dtype=np.uint64)
+    plan = exact_range(lo, hi, shift=shift, width=width)
+    fields = (keys >> np.uint64(shift)) & np.uint64((1 << width) - 1)
+    want = (fields >= np.uint64(lo)) & (fields < np.uint64(hi))
+    np.testing.assert_array_equal(plan.evaluate(keys), want)
