@@ -5,9 +5,11 @@ CI runs this after benchmarks/kernel_micro.py so the perf trajectory is a
 *gate*, not just an uploaded artifact.  Three metric classes, picked by
 name, each with its own tolerance discipline:
 
-  * counter metrics (``*_bytes*``) — byte-traffic invariants of the
-    device-resident plane store (0 warm restage, 4096 per dirty row).
-    These are exact contracts: any drift fails.
+  * counter metrics (``*_bytes*``, ``*_programs*``) — byte-traffic
+    invariants of the device-resident plane store (0 warm restage, 4096
+    per dirty row) and the write path's exact program counts (buffered
+    replay MUST coalesce below one program per write).  These are exact
+    contracts: any drift fails.
   * ratio metrics (``*speedup*``) — dimensionless A/B throughput ratios
     measured in the same process, so machine speed cancels out.  They must
     stay above both an absolute floor (the gates the benchmark itself
@@ -25,7 +27,8 @@ updated baseline alongside the benchmark change that adds them.
 
 Usage:
     python benchmarks/check_regression.py \
-        BENCH_kernel_micro.json benchmarks/BENCH_kernel_micro.baseline.json
+        benchmarks/BENCH_kernel_micro.json \
+        benchmarks/BENCH_kernel_micro.baseline.json
 """
 from __future__ import annotations
 
@@ -39,13 +42,14 @@ RATIO_FLOORS = {           # ...but never dip below the hard gates
     "sharded_speedup_16chip": 2.0,
     "sharded_speedup_4chip": 1.2,
     "plan_fused_speedup": 2.0,
+    "write_coalesce_speedup": 2.0,
 }
 
 
 def classify(name: str) -> str:
     if "speedup" in name:
         return "ratio"
-    if "_bytes" in name:
+    if "_bytes" in name or "_programs" in name:
         return "counter"
     return "timing"
 

@@ -67,10 +67,12 @@ def write_bench_json(bench_name: str, path: str | None = None) -> str:
     """Persist every metric emitted so far as ``BENCH_<name>.json``.
 
     CI uploads these files as build artifacts so the perf trajectory
-    accumulates across commits.  ``BENCH_JSON_DIR`` overrides the output
-    directory.
+    accumulates across commits.  The default output directory is
+    ``benchmarks/`` (next to the committed baselines), independent of the
+    caller's cwd; ``BENCH_JSON_DIR`` overrides it.
     """
-    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    out_dir = os.environ.get("BENCH_JSON_DIR") \
+        or os.path.dirname(os.path.abspath(__file__))
     path = path or os.path.join(out_dir, f"BENCH_{bench_name}.json")
     with open(path, "w") as f:
         json.dump({"bench": bench_name, "metrics": _METRICS}, f, indent=2)

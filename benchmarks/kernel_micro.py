@@ -137,6 +137,77 @@ def functional_burst_comparison(n_queries: int = 384,
          f"q={n_queries}_1_launch_per_burst_speedup={speed_f:.1f}x")
 
 
+def write_path_comparison(n_queries: int = 384,
+                          n_key_pages: int = 8) -> None:
+    """Coalescing DRAM write buffer vs per-write reprogram (§VI write path).
+
+    The same write-heavy YCSB-A stream (read_ratio=0.5, alpha=0.9) replays
+    twice on the batched backend: unbuffered, every write force-splits the
+    open read burst and synchronously reprograms its value page (1 program
+    + 1 dirty-row restage per write, zero coalescing); buffered, writes
+    absorb into the DRAM write buffer (reads of dirty pages served from
+    the overlay), hot pages coalesce last-wins and dirty pages drain in
+    grouped deferred-program bursts at the high-water mark.  Read values
+    must be bit-identical.  Gates: ``write_programs_buffered`` /
+    ``write_staged_bytes_*`` are exact counters (programs MUST come out
+    below n_writes — the §VI coalescing claim), and the buffered replay
+    must beat the per-write replay >= 2x end to end
+    (``write_coalesce_speedup``, also floored in check_regression.py).
+    """
+    wl = generate(n_queries, n_key_pages=n_key_pages, read_ratio=0.5,
+                  alpha=0.9, seed=11)
+    wl_tiny = generate(1, n_key_pages=n_key_pages, read_ratio=0.5,
+                       alpha=0.9, seed=11)
+    pages_per_chip = max(wl.n_index_pages // 4 + 1, 8)
+
+    def once(buffered: bool, workload=wl):
+        arr = SimChipArray(n_chips=4, pages_per_chip=pages_per_chip,
+                           device_seed=3)
+        return run_functional(workload, make_backend("batched", arr),
+                              burst=64, fused=True, write_buffer=buffered,
+                              write_high_water=8)
+
+    results, times, staged = {}, {}, {}
+    for label, buffered in (("per_write", False), ("buffered", True)):
+        results[label] = once(buffered)         # warm compile caches
+        once(buffered, wl_tiny)                 # ... incl. tiny-burst shapes
+        with Timer() as t0:
+            once(buffered, wl_tiny)             # programming-dominated run
+        with Timer() as t1:
+            r = once(buffered)
+        with Timer() as t2:                     # best-of-2: timing noise
+            once(buffered)                      # must not flap the gate
+        setup = t0.elapsed_us
+        times[label] = max(min(t1.elapsed_us, t2.elapsed_us) - setup, 1.0)
+        staged[label] = r.staged_bytes
+
+    rb, rp = results["buffered"], results["per_write"]
+    np.testing.assert_array_equal(rp.read_values, rb.read_values)
+    np.testing.assert_array_equal(rp.read_hits, rb.read_hits)
+    assert rp.programs == rp.n_writes, "per-write path must not coalesce"
+    assert rb.programs < rb.n_writes, \
+        f"buffered replay must coalesce: {rb.programs} programs " \
+        f"for {rb.n_writes} writes"
+    speedup = times["per_write"] / times["buffered"]
+    assert speedup >= 2.0, \
+        f"write-buffer speedup {speedup:.1f}x < 2x gate"
+    emit("functional_write_per_write", times["per_write"] / n_queries,
+         f"q={n_queries}_writes={rp.n_writes}_1_program+1_burst_split_per_write")
+    emit("functional_write_buffered", times["buffered"] / n_queries,
+         f"q={n_queries}_writes={rb.n_writes}_grouped_programs"
+         f"_overlay_hits={rb.buffer_read_hits}")
+    emit("write_coalesce_speedup", speedup,
+         f"per_write_over_buffered_q={n_queries}_ci_gate>=2x")
+    emit("write_programs_per_write", rp.programs,
+         f"programs==n_writes={rp.n_writes}_no_coalescing")
+    emit("write_programs_buffered", rb.programs,
+         f"n_writes={rb.n_writes}_high_water=8_hot_page_coalescing")
+    emit("write_staged_bytes_per_write", staged["per_write"],
+         "dirty_row_restage_per_write_plus_cold_arena")
+    emit("write_staged_bytes_buffered", staged["buffered"],
+         "grouped_program_staging_plus_cold_arena")
+
+
 def staged_bytes_per_flush(n_pages: int = 32, n_q: int = 16) -> None:
     """Measure host->device page traffic across repeated identical flushes.
 
@@ -395,6 +466,7 @@ def main(scale: int = 1) -> None:
 
     backend_batch_comparison()
     functional_burst_comparison()
+    write_path_comparison()
     staged_bytes_per_flush()
     range_plan_comparison()
     sharded_scaling()

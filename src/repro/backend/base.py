@@ -32,6 +32,20 @@ combine happens in-latch (paper Fig 10), so ONE 64 B bitmap per page comes
 back instead of one per pass (``BackendStats.result_bytes`` counts the
 difference).
 
+The write path is deferred too: ``submit_program`` queues an ``Op.PROGRAM``
+(a full-page entry image) instead of reprogramming the chip inline.
+Repeated programs of one page within a burst coalesce last-wins — every
+ticket of the page resolves to the final image's ``BuiltPage`` and only ONE
+chip program executes (``BackendStats.programs`` /
+``programs_coalesced``).  At ``flush()`` the queued programs run *first*
+(so commands flushed alongside them see the new images), and the kernel
+backends re-stage every programmed page's device-resident plane row in ONE
+grouped scatter (``PlaneStore.stage_group``) instead of the per-page
+invalidate-then-restage round trip the eager ``program_entries`` path
+causes.  This is the backend half of the §VI "whole cache acts as a write
+buffer" configuration; the host half (coalescing across bursts, overlay
+reads) lives in ``repro.buffer.writebuffer``.
+
 Result delivery is *lazy* on the kernel backends: ``flush()`` dispatches
 the launches and attaches a ``LazyResultBatch`` to each ticket; the
 device->host transfer and host tail run at the first ``result()`` call of
@@ -47,13 +61,15 @@ The scalar and batched backends are its degenerate 1x1 cases and its
 bit-exactness references.
 
 Future backends the ROADMAP names (async, replicated) implement the same
-five methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
-``submit_plan``, ``flush``.
+six methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
+``submit_plan``, ``submit_program`` (inherited), ``flush``.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
+
+import numpy as np
 
 from repro.core.commands import (Command, GatherResponse, LookupResponse,
                                  ReadFullResponse, SearchResponse)
@@ -75,6 +91,10 @@ class BackendStats:
                                # once the working set is warm (only new or
                                # reprogrammed pages ever re-ship)
     batched_searches: int = 0  # searches that shared a launch with >= 1 peer
+    programs: int = 0          # deferred Op.PROGRAM commands executed
+    programs_coalesced: int = 0  # queued programs absorbed by a later
+                               # program of the same page before the flush
+                               # (last-wins; the page is programmed once)
     result_bytes: int = 0      # exact device->host result payload: 64 B per
                                # search/plan bitmap (per unique launch cell
                                # on kernel backends — dedup'd commands share
@@ -164,6 +184,10 @@ class MatchBackend(abc.ABC):
     def __init__(self, chips: SimChipArray):
         self.chips = chips
         self.stats = BackendStats()
+        # Deferred Op.PROGRAM queue: page addr -> [entries, kwargs, tickets].
+        # A dict so repeated programs of one page coalesce last-wins before
+        # anything touches the chip (insertion order = program order).
+        self._program_queue: dict[int, list] = {}
 
     # ------------------------------------------------------------- storage
     # Programming and full-page reads are storage-mode operations; both
@@ -172,6 +196,53 @@ class MatchBackend(abc.ABC):
     # identical regardless of backend choice.
     def program_entries(self, page_addr: int, entries, **kw):
         return self.chips.program_entries(page_addr, entries, **kw)
+
+    def submit_program(self, page_addr: int, entries, **kw) -> Ticket:
+        """Queue a deferred page program (Op.PROGRAM).
+
+        The entry image is copied at submit time (callers keep mutating
+        their host mirrors).  Programs of the same page coalesce last-wins:
+        one chip program executes at flush and every ticket of the page
+        resolves to the final image's ``BuiltPage``.  Backends run queued
+        programs *before* the burst's other commands and re-stage the
+        programmed pages' plane rows in one grouped update.
+        """
+        t = Ticket(self)
+        arr = np.array(entries, dtype=np.uint64, copy=True)
+        entry = self._program_queue.get(int(page_addr))
+        if entry is None:
+            self._program_queue[int(page_addr)] = [arr, kw, [t]]
+        else:
+            entry[0], entry[1] = arr, kw
+            entry[2].append(t)
+            self.stats.programs_coalesced += 1
+        return t
+
+    @property
+    def pending_programs(self) -> int:
+        """Queued (post-coalescing) deferred programs."""
+        return len(self._program_queue)
+
+    def _execute_programs(self) -> list[int]:
+        """Run the queued programs against the chip model, in submit order.
+
+        Resolves every ticket and returns the programmed page addresses so
+        kernel backends can re-stage them as ONE group (and timeline-coupled
+        backends can report the program group).  Called by ``flush()``
+        before any queued command executes — commands flushed in the same
+        burst match against the new images, exactly like the eager path.
+        """
+        if not self._program_queue:
+            return []
+        queue, self._program_queue = self._program_queue, {}
+        addrs: list[int] = []
+        for page_addr, (entries, kw, tickets) in queue.items():
+            built = self.chips.program_entries(page_addr, entries, **kw)
+            self.stats.programs += 1
+            for t in tickets:
+                t._resolve(built)
+            addrs.append(page_addr)
+        return addrs
 
     def read_full(self, page_addr: int) -> ReadFullResponse:
         return self.chips.read_full(page_addr)

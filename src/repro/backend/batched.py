@@ -297,11 +297,22 @@ class BatchedKernelBackend(MatchBackend):
     @property
     def pending(self) -> int:
         return (len(self._searches) + len(self._gathers)
-                + len(self._lookups) + len(self._plans))
+                + len(self._lookups) + len(self._plans)
+                + self.pending_programs)
 
     def flush(self) -> None:
+        # Deferred programs first: one grouped chip-program pass, then ONE
+        # plane-store scatter re-stages every programmed row — the burst's
+        # other phases (and any later flush) see current arena rows without
+        # per-page invalidate/restage round trips.
+        programs = self._execute_programs()
+        if programs:
+            self.store.stage_group(programs)
+            self.stats.staged_bytes = self.store.staged_bytes
         if not (self._searches or self._gathers or self._lookups
                 or self._plans):
+            if programs:
+                self.stats.flushes += 1
             return
         self.stats.flushes += 1
         searches, self._searches = self._searches, []

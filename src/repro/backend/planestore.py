@@ -149,6 +149,23 @@ class PlaneStore:
                 self.staged_log.extend(dirty_staged)
         return rows
 
+    def stage_group(self, page_addrs) -> int:
+        """Re-stage a group of just-programmed pages in ONE device update.
+
+        The deferred write path (``MatchBackend.submit_program``) calls this
+        right after its grouped chip programs: every listed page that is
+        resident-and-dirty, or not yet resident, ships in a single
+        ``_stage`` scatter — N programs cost one ``.at[idx].set`` per plane
+        instead of N per-page invalidate-then-restage round trips through
+        later ``rows_for`` calls.  Clean resident pages are skipped, and
+        dirty restages enter ``staged_log``, both exactly as in
+        ``rows_for`` — which does all the work here; this entry point only
+        discards the row indices.  Returns the number of rows staged.
+        """
+        before = self.staged_rows
+        self.rows_for([int(a) for a in page_addrs])
+        return self.staged_rows - before
+
     def _stage(self, addrs: list[int]) -> None:
         """Ship the listed pages' planes host->device (the only page bytes
         that ever cross after warm-up: new rows and dirty rows)."""

@@ -60,11 +60,17 @@ class ScalarBackend(MatchBackend):
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + self.pending_programs
 
     def flush(self) -> None:
+        # Deferred programs run first (coalesced last-wins per page), so
+        # commands flushed alongside them match against the new images —
+        # identical ordering to the kernel backends' grouped program phase.
+        programs = self._execute_programs()
         queue, self._queue = self._queue, []
         if not queue:
+            if programs:
+                self.stats.flushes += 1
             return
         self.stats.flushes += 1
         for kind, cmd, ticket in queue:

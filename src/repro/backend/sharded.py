@@ -234,11 +234,27 @@ class ShardedSsdBackend(MatchBackend):
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._pending)
+        return sum(len(q) for q in self._pending) + self.pending_programs
 
     # --------------------------------------------------------------- flush
     def flush(self) -> None:
+        # Deferred write path first: one grouped chip-program pass, ONE
+        # plane-store scatter for every programmed row, and one program-
+        # group report to the timeline (programs queue async on each die's
+        # program line; restaged dirty planes charge the storage-mode
+        # channel bus — the client clock does not advance).
+        programs = self._execute_programs()
+        if programs:
+            self.store.stage_group(programs)
+            if self.timeline is not None:
+                staged, self.store.staged_log = self.store.staged_log, []
+                self.timeline.observe_program_group(
+                    [self.decompose(a)[0] for a in programs],
+                    restage_chips=[self.decompose(a)[0] for a in staged])
+            self.stats.staged_bytes = self.store.staged_bytes
         if not any(self._pending):
+            if programs:
+                self.stats.flushes += 1
             return
         self.stats.flushes += 1
         searches, lookups, gathers, plans = [], [], [], []

@@ -1,0 +1,3 @@
+from .writebuffer import WriteBuffer, WriteBufferStats
+
+__all__ = ["WriteBuffer", "WriteBufferStats"]

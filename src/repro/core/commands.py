@@ -107,6 +107,10 @@ class Command:
 
     @staticmethod
     def program(page_addr: int, **kw) -> "Command":
+        """Storage-mode page program.  The deferred write path does not
+        route entry images through Command objects — see
+        ``MatchBackend.submit_program``, which queues (page, entries)
+        directly and coalesces last-wins per page."""
         return Command(Op.PROGRAM, page_addr, **kw)
 
 

@@ -43,6 +43,7 @@ class EnergyAccount:
 class SimStats:
     reads: int = 0
     writes: int = 0
+    scans: int = 0
     senses: int = 0
     programs: int = 0
     matches: int = 0
@@ -74,6 +75,7 @@ class SSDSim:
         self.stats = SimStats()
         self.read_latencies: list[float] = []
         self.write_latencies: list[float] = []
+        self.scan_latencies: list[float] = []
         self._rng = np.random.default_rng(seed)
 
         n_dies = params.n_dies
@@ -301,4 +303,43 @@ class SSDSim:
         self.stats.writes += 1
         end = self.write(key_page, value_page, now)
         self.write_latencies.append(end - now)
+        return end
+
+    # --------------------------------------------------------------- scans
+    def scan(self, key_pages: list[int], now: float) -> float:
+        """YCSB-E range scan over the key pages the range touches (§V-C).
+
+        ``sim`` system: a match-mode multi-page read — per page, one
+        ``_open_for_match`` (skipped when the page is already latched), one
+        match op (the fused Op.PLAN evaluates every decomposition pass
+        in-latch, so only the combined 64 B bitmap crosses the bus and the
+        PCIe link per page).  Scans are *reads*: they never dirty the cache
+        and never program — the timing executor used to funnel them into
+        ``submit_write``, corrupting QPS/latency/energy and ``programs``
+        for any scan-bearing workload.
+
+        ``baseline`` system: conventional full-page reads of each touched
+        page through the OS page cache + a host-side scan of the page.
+        """
+        self.stats.scans += 1
+        end = now
+        if self.system == "baseline":
+            for page in key_pages:
+                if self.cache.lookup(page):
+                    t = now + self.p.dram_hit_ns
+                else:
+                    t = self._fetch_full_page(page, now)
+                    t = self._evict_sync(
+                        self.cache.insert(page, dirty=False), t)
+                end = max(end, t)
+            end += self.p.cpu_search_ns
+        else:
+            for page in key_pages:
+                t = self._open_for_match(page, now)
+                t = self._match(t)
+                t = self._bus(page, t, BITMAP_BYTES, match_mode=True)
+                t = self._pcie(t, BITMAP_BYTES)
+                end = max(end, t)
+            end += self.p.mmio_ns
+        self.scan_latencies.append(end - now)
         return end

@@ -163,3 +163,25 @@ class BurstTimeline:
         t = sim._program(chip % self.params.n_dies, t)
         self.write_latencies.append(t - self.now)
         return t - self.now
+
+    def observe_program_group(self, chips: list[int],
+                              restage_chips: list[int] | None = None
+                              ) -> list[float]:
+        """A deferred write-buffer flush: the whole dirty group at once.
+
+        Each page crosses PCIe (serialized on the one link) and queues on
+        its die's program timeline — dies program in parallel, a hot die
+        accumulates backlog.  ``restage_chips`` lists the pages whose
+        device-resident planes re-staged with the group: each crosses its
+        channel bus in storage mode (the write-back hop; overwrites
+        already coalesced, so it is at most one hop per page per group).
+        The client clock does NOT advance — SiM's write buffer drains
+        asynchronously; the cost surfaces as program-line backlog and bus
+        occupancy.  Returns the per-program completion latencies, which
+        also append to ``write_latencies``.
+        """
+        out = [self.observe_program(c) for c in chips]
+        for c in restage_chips or ():
+            self.sim._bus(c % self.params.n_dies, self.now, PAGE_BYTES,
+                          match_mode=False)
+        return out

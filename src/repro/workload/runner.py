@@ -6,7 +6,11 @@ start after a 30 % warmup; QPS = measured queries / measured makespan.
 Two executors live here:
 
   * ``run``            — the *timing* simulation on SSDSim (latency/energy,
-                         no real data);
+                         no real data).  Reads are match-mode
+                         search+gather pairs, writes are buffered page
+                         programs, and YCSB-E scans (``ops == 2``) are
+                         match-mode multi-page READS over the key pages
+                         the range touches — never writes;
   * ``run_functional`` — the *functional* execution of the same op stream
                          against real programmed pages through a
                          MatchBackend, batching read bursts.  With
@@ -34,6 +38,7 @@ import heapq
 import numpy as np
 
 from repro.backend import as_backend
+from repro.buffer.writebuffer import WriteBuffer
 from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
 from repro.core.commands import Command
 from repro.core.page import mask_header_slots
@@ -62,6 +67,8 @@ class RunResult:
     absorbed_writes: int
     batched_searches: int
     makespan_ns: float
+    writes: int = 0           # write ops simulated (scan ops excluded)
+    scans: int = 0            # YCSB-E scan ops simulated as multi-page reads
 
 
 @dataclasses.dataclass
@@ -74,6 +81,15 @@ class FunctionalRunResult:
     kernel_launches: int      # device launches (0 on the scalar backend)
     staged_bytes: int = 0     # host->device page bytes (0 on scalar)
     result_bytes: int = 0     # exact device->host result payload bytes
+    # Write path.  Unbuffered, every write reprograms its value page
+    # synchronously: programs == n_writes.  Through the §VI DRAM write
+    # buffer, hot-page writes coalesce and dirty pages flush in grouped
+    # deferred-program bursts: programs < n_writes on any skewed stream,
+    # and reads of buffered pages are DRAM hits (buffer_read_hits) that
+    # never queue a device command.
+    programs: int = 0         # value-page programs issued during the replay
+    write_flushes: int = 0    # write-buffer group flushes (0 unbuffered)
+    buffer_read_hits: int = 0  # reads served from the write-buffer overlay
     # YCSB-E scans (op 2): matched-key count per scan op, 0 elsewhere.
     # Each scan replays as one Op.PLAN per key page (fused in-latch range
     # evaluation) and must be bit-identical across backends.
@@ -89,7 +105,9 @@ class FunctionalRunResult:
 
 
 def run_functional(workload: Workload, backend, *, burst: int = 64,
-                   fused: bool = False) -> FunctionalRunResult:
+                   fused: bool = False,
+                   write_buffer: "WriteBuffer | bool" = False,
+                   write_high_water: int = 16) -> FunctionalRunResult:
     """Execute the op stream against real pages through a MatchBackend.
 
     Key id ``k`` lives on key page ``k // 504`` at entry ``k % 504`` with
@@ -104,9 +122,23 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
     burst has been flushed, so host staging and device compute of adjacent
     bursts overlap (the depth-1 pipeline — results are position-tagged, so
     replay stays bit-identical).
-    A write flushes the open burst first (read-your-writes), updates the
-    host mirror and reprograms the value page through the backend — which
-    invalidates exactly that page's row in the device-resident plane store.
+    Writes, unbuffered (default): a write flushes the open burst first
+    (read-your-writes), updates the host mirror and reprograms the value
+    page through the backend — which invalidates exactly that page's row
+    in the device-resident plane store.  One program + one forced burst
+    split per write: the eager reference.
+    Writes, buffered (``write_buffer=True`` or a ``WriteBuffer``): the §VI
+    DRAM write-buffer configuration.  A write *absorbs* into the buffer —
+    no forced ``resolve_burst``, no program; repeated writes to a hot page
+    coalesce last-wins.  Reads of a buffered page are served from the DRAM
+    overlay (read-your-writes without a device command); reads of clean
+    pages queue as usual, and stay correct because the on-flash image only
+    changes at a buffer flush, which resolves the open burst first.  Dirty
+    pages drain at the ``write_high_water`` mark (and at end of stream) as
+    ONE deferred-program group per flush — grouped plane-store staging,
+    async program-line accounting on a timeline-coupled backend — so
+    ``programs`` comes out *below* ``n_writes`` on any skewed stream while
+    read values stay bit-identical to the unbuffered eager replay.
     A scan op (YCSB-E, ``ops == 2``) replays as ONE ``Op.PLAN`` per key
     page the scanned range touches: the §V-C exact-range decomposition
     evaluates fused in-latch and 64 B per page crosses back, regardless
@@ -133,6 +165,10 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
     timeline = getattr(backend, "timeline", None)
     if timeline is not None:
         timeline.reset()
+
+    if write_buffer is True:
+        write_buffer = WriteBuffer(high_water=write_high_water)
+    wb: WriteBuffer | None = write_buffer or None
 
     n = len(workload.ops)
     out = np.zeros(n, dtype=np.uint64)
@@ -243,10 +279,21 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         scan_counts[qi] = total
         n_scans += 1
 
-    n_reads = n_writes = 0
+    n_reads = n_writes = programs = write_flushes = 0
     for qi in range(n):
         if workload.ops[qi] == 0:
             n_reads += 1
+            if wb is not None:
+                # Read-your-writes from DRAM: a dirty value page serves the
+                # read straight from the buffered image — no device command.
+                # (Key pages are never written, so a buffered value page
+                # always implies the key exists on its key page.)
+                overlay = wb.get(int(workload.value_pages[qi]))
+                if overlay is not None:
+                    k = int(workload.keys[qi])
+                    out[qi] = overlay[k % KEYS_PER_PAGE]
+                    hits[qi] = True
+                    continue
             pending.append(qi)
             if len(pending) >= burst:
                 resolve_burst()
@@ -254,14 +301,28 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
             run_scan(qi)
         else:
             n_writes += 1
-            resolve_burst()                 # read-your-writes ordering
             k = int(workload.keys[qi])
             values[k] = np.uint64(qi * 2 + 1)   # tagged by op index, odd
             p = k // KEYS_PER_PAGE
             s = p * KEYS_PER_PAGE
-            backend.program_entries(value_page_of(p, n_key_pages),
-                                    values[s:s + KEYS_PER_PAGE])
+            if wb is not None:
+                # Absorb into the DRAM buffer; the on-flash image stays as
+                # queued reads expect it until the grouped flush below.
+                wb.put(value_page_of(p, n_key_pages),
+                       values[s:s + KEYS_PER_PAGE])
+                if wb.should_flush:
+                    resolve_burst()     # queued reads precede the programs
+                    programs += wb.flush(backend)
+                    write_flushes += 1
+            else:
+                resolve_burst()             # read-your-writes ordering
+                backend.program_entries(value_page_of(p, n_key_pages),
+                                        values[s:s + KEYS_PER_PAGE])
+                programs += 1
     resolve_burst()
+    if wb is not None and wb.n_dirty:
+        programs += wb.flush(backend)
+        write_flushes += 1
     drain_inflight()
     result = FunctionalRunResult(
         read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
@@ -269,6 +330,8 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         kernel_launches=backend.stats.kernel_launches,
         staged_bytes=backend.stats.staged_bytes,
         result_bytes=backend.stats.result_bytes,
+        programs=programs, write_flushes=write_flushes,
+        buffer_read_hits=wb.stats.read_hits if wb is not None else 0,
         scan_counts=scan_counts if n_scans else None, n_scans=n_scans)
     if timeline is not None:
         result.burst_latencies_ns = np.asarray(timeline.burst_latencies)
@@ -306,6 +369,23 @@ def run(workload: Workload, *, params: FlashParams, system: str,
     # using a small pending map keyed by page.
     pending_same_page: dict[int, list[float]] = {}
 
+    n_key_pages = workload.n_index_pages // 2
+    n_keys = n_key_pages * KEYS_PER_PAGE
+
+    def scan_pages(qi: int) -> list[int]:
+        """Key pages a YCSB-E scan touches — same placement arithmetic as
+        the functional executor's ``run_scan``, so both executors model an
+        identical page footprint for one op stream."""
+        if workload.keys is None or workload.scan_lens is None:
+            return [int(workload.key_pages[qi])]
+        lo = int(workload.keys[qi]) + 1          # stored key of id k is k+1
+        hi = min(lo + int(workload.scan_lens[qi]), n_keys + 1)
+        if lo >= hi:
+            return []
+        p0 = (lo - 1) // KEYS_PER_PAGE
+        p1 = (hi - 2) // KEYS_PER_PAGE
+        return list(range(p0, min(p1, n_key_pages - 1) + 1))
+
     while next_q < n:
         now, client = heapq.heappop(heap)
         op = workload.ops[next_q]
@@ -331,6 +411,12 @@ def run(workload: Workload, *, params: FlashParams, system: str,
                     and rng.random() < full_page_read_ratio)
             end = sim.read(kp, vp, now, force_full_page=full,
                            batch_extra=batch_extra)
+        elif op == 2:
+            # YCSB-E scan: a match-mode multi-page READ.  This used to fall
+            # into the write branch below, counting every scan as a page
+            # write (wrong QPS/latency/energy, phantom programs on any
+            # scan_ratio > 0 workload).
+            end = sim.scan(scan_pages(next_q), now)
         else:
             end = sim.submit_write(kp, vp, now)
         heapq.heappush(heap, (end, client))
@@ -356,4 +442,6 @@ def run(workload: Workload, *, params: FlashParams, system: str,
         absorbed_writes=sim.cache.stats.absorbed_writes,
         batched_searches=s.batched_searches - (m.batched_searches if m else 0),
         makespan_ns=makespan,
+        writes=s.writes - (m.writes if m else 0),
+        scans=s.scans - (m.scans if m else 0),
     )

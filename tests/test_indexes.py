@@ -101,3 +101,101 @@ def test_secondary_index_fig9_fig10():
     assert set(codec.decode_rows(got, "uid").tolist()) == exp
     got_a = si.select_range("salary", 2001, 7000, exact=False)
     assert set(codec.decode_rows(got_a, "uid").tolist()) == exp
+
+
+# --------------------------------------------------------------------------
+# Hash index: degenerate splits (depth cap) + buffered bucket programs
+# --------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+def _inv_shift_xor(z: int, r: int) -> int:
+    """Invert y = z ^ (z >> r) for 64-bit z."""
+    y = z
+    for _ in range(64 // r + 1):
+        y = z ^ (y >> r)
+    return y & _M64
+
+
+def _unhash64(h: int) -> int:
+    """Exact inverse of hashindex._hash64 (splitmix64 is a bijection)."""
+    inv1 = pow(0x94D049BB133111EB, -1, 1 << 64)
+    inv2 = pow(0xBF58476D1CE4E5B9, -1, 1 << 64)
+    z = _inv_shift_xor(h, 31)
+    z = (z * inv1) & _M64
+    z = _inv_shift_xor(z, 27)
+    z = (z * inv2) & _M64
+    z = _inv_shift_xor(z, 30)
+    return (z - 0x9E3779B97F4A7C15) & _M64
+
+
+def test_unhash64_is_inverse():
+    from repro.index.hashindex import _hash64
+    rng = np.random.default_rng(0)
+    hs = rng.integers(1, 2**63, 64, dtype=np.uint64)
+    keys = np.array([_unhash64(int(h)) for h in hs], dtype=np.uint64)
+    np.testing.assert_array_equal(_hash64(keys), hs)
+
+
+def test_hash_index_adversarial_keys_no_unbounded_recursion():
+    """Every key shares the low hash bits up to the depth cap: the old
+    recursive insert split forever (all keys on one side at every depth);
+    the iterative path splits to the cap and overflows in place."""
+    from repro.index.hashindex import BUCKET_CAPACITY
+    depth_cap = 8
+    n = BUCKET_CAPACITY + 6                 # forces splits, then overflow
+    # identical low-8 hash bits -> one directory slot at every depth <= 8
+    keys = [_unhash64((i << depth_cap) | 0x5A) for i in range(1, n + 1)]
+    assert all(0 < k < 2**64 - 1 for k in keys)
+    h = SimHashIndex(SimChipArray(n_chips=4, pages_per_chip=2048),
+                     depth_cap=depth_cap)
+    for i, k in enumerate(keys):
+        h.insert(int(k), i + 1)             # must terminate
+    assert h.splits > 0
+    target = h.buckets[h.directory[h._dir_slot(keys[0])]]
+    assert target.local_depth == depth_cap
+    assert target.n == n                    # overflowed past BUCKET_CAPACITY
+    got = h.lookup_batch([int(k) for k in keys[::29]])
+    assert got == [keys.index(k) + 1 for k in keys[::29]]
+
+
+def test_hash_index_overflow_past_page_raises():
+    """At the depth cap the overflow is bounded by the page's user slots:
+    a key set degenerate past 504 entries fails loudly, not silently."""
+    from repro.core.page import USER_SLOTS
+    depth_cap = 4
+    keys = [_unhash64((i << depth_cap) | 0x3) for i in range(1, USER_SLOTS + 2)]
+    h = SimHashIndex(SimChipArray(n_chips=2, pages_per_chip=256),
+                     depth_cap=depth_cap)
+    with pytest.raises(RuntimeError, match="depth cap"):
+        for i, k in enumerate(keys):
+            h.insert(int(k), i + 1)
+    # ...but a value UPDATE of a resident key needs no new slot and must
+    # still succeed against the full capped bucket
+    h.insert(int(keys[0]), 4242)
+    assert h.lookup(int(keys[0])) == 4242
+
+
+def test_hash_index_inserts_coalesce_programs():
+    """Consecutive inserts ride the write buffer: far fewer bucket-page
+    programs than the 2-per-insert eager path, and lookups (which flush
+    first) stay correct mid-stream."""
+    rng = np.random.default_rng(9)
+    keys = (rng.choice(10**9, size=600, replace=False) + 1).astype(np.uint64)
+    arr = SimChipArray(n_chips=4, pages_per_chip=512)
+    h = SimHashIndex(arr, write_high_water=16)
+    programs0 = sum(c.counters.programs for c in arr.chips)
+    for k in keys[:300]:
+        h.insert(int(k), int(k) % 1097)
+    # mid-stream read-your-writes through the flush-on-lookup path
+    assert h.lookup(int(keys[0])) == int(keys[0]) % 1097
+    for k in keys[300:]:
+        h.insert(int(k), int(k) % 1097)
+    h.flush_writes()
+    programs = sum(c.counters.programs for c in arr.chips) - programs0
+    assert programs < 2 * len(keys) / 4, \
+        f"{programs} programs for {len(keys)} inserts: no coalescing"
+    assert h.write_buffer.stats.coalesced > 0
+    for k in keys[::43]:
+        assert h.lookup(int(k)) == int(k) % 1097
