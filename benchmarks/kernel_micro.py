@@ -120,7 +120,7 @@ def functional_burst_comparison(n_queries: int = 384,
             results[label] = once(name, fused)
         times[label] = max(t.elapsed_us - t0.elapsed_us, 1.0)
 
-    for label, r in results.items():
+    for r in results.values():
         np.testing.assert_array_equal(results["scalar"].read_values,
                                       r.read_values)
     assert results["fused"].kernel_launches == results["fused"].flushes, \

@@ -1,0 +1,10 @@
+"""SIM rule registry for the contract linter."""
+from .sim001_tickets import Sim001Tickets
+from .sim002_observers import Sim002Observers
+from .sim003_hostsync import Sim003HostSync
+from .sim004_counters import Sim004Counters
+
+ALL_RULES = (Sim001Tickets(), Sim002Observers(), Sim003HostSync(),
+             Sim004Counters())
+
+RULES_BY_ID = {r.rule_id: r for r in ALL_RULES}

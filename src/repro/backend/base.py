@@ -63,6 +63,34 @@ bit-exactness references.
 Future backends the ROADMAP names (async, replicated) implement the same
 six methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
 ``submit_plan``, ``submit_program`` (inherited), ``flush``.
+
+Protocol invariants (statically enforced by ``repro.analysis``; rule IDs
+in brackets — see README "Static gates"):
+
+  I1 [SIM001]  Ticket discipline.  Every ``submit_*`` return value is
+      kept, and a ``.result()`` on a ticket submitted in the same function
+      is dominated by a ``flush()``.  Violations silently degrade to the
+      eager one-command-per-launch path (§IV-E anti-pattern) or lean on a
+      *later* burst's flush.  The eager ``search``/``gather``/``lookup``/
+      ``plan`` wrappers above are the reviewed exception (baselined):
+      ``Ticket.result()`` auto-flushes by contract.
+
+  I2 [SIM002]  Observer completeness.  Every mutation of a stored page
+      image (``SimChip.pages``/``raw``) notifies the write observers, and
+      every arena-plane mutation (``PlaneStore._lo``/``_hi``/...) updates
+      the dirty/staging bookkeeping — otherwise a kernel backend matches
+      against a stale device-resident row.
+
+  I3 [SIM003]  No host sync in the hot path.  ``flush``/``_flush_*``/
+      ``_dispatch*``/``_stacked*`` bodies and the kernel ``ops.py``
+      wrappers never force a device->host transfer (``np.asarray``,
+      ``int()``, ``.block_until_ready()`` on launch outputs); the host
+      tail lives in the deferred closures ``LazyResultBatch`` runs.
+
+  I4 [SIM004]  Counter integrity.  ``BackendStats`` fields move only
+      inside the accounting helpers (flush phases, submit/resolve paths,
+      deferred tails) — the staged/result byte exactness the launch audit
+      (SIM101..SIM105) reconciles against the traced jaxpr depends on it.
 """
 from __future__ import annotations
 

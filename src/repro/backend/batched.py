@@ -235,7 +235,7 @@ def resolve_gather_responses(chips, gathers, out, parity_snap) -> int:
         parity_all = np.zeros(0, dtype=bool)
 
     pos = 0
-    for r, (cmd, ticket) in enumerate(gathers):
+    for r, (_cmd, ticket) in enumerate(gathers):
         chip, local = owners[r]
         chunk_ids = chunk_ids_per[r]
         k = int(chunk_ids.size)

@@ -106,9 +106,18 @@ class WriteBuffer:
         if not self._dirty:
             return 0
         dirty, self._dirty = self._dirty, {}
-        for page_addr, (entries, kw) in dirty.items():
-            backend.submit_program(page_addr, entries, **kw)
+        tickets = [backend.submit_program(page_addr, entries, **kw)
+                   for page_addr, (entries, kw) in dirty.items()]
         backend.flush()
+        # Every program ticket must have resolved in THIS flush (SIM001):
+        # a backend that left one pending would silently defer the page
+        # image to some later burst, breaking read-your-writes for readers
+        # that bypass the (now clean) overlay.
+        unresolved = sum(1 for t in tickets if not t.done)
+        if unresolved:
+            raise RuntimeError(
+                f"backend.flush() left {unresolved}/{len(tickets)} buffered "
+                "page programs unresolved")
         self.stats.programs += len(dirty)
         self.stats.flushes += 1
         return len(dirty)

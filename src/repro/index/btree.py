@@ -169,7 +169,7 @@ class SimBTree:
         self.backend.flush()
 
         out: list[tuple[int, int]] = []
-        for leaf, slots, gk, gv in hits:
+        for _leaf, slots, gk, gv in hits:
             rk, rv = gk.result(), gv.result()
             self.stats.chunk_bytes += 64 * (len(rk.chunk_ids)
                                             + len(rv.chunk_ids))

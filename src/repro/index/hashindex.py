@@ -114,7 +114,7 @@ class SimHashIndex:
         self._next_page = 0
         self.buckets: list[Bucket] = []
         self.directory: list[int] = []
-        for i in range(1 << global_depth):
+        for _ in range(1 << global_depth):
             self.directory.append(self._new_bucket(global_depth))
         self.splits = 0
         self.split_searches = 0

@@ -27,15 +27,26 @@ _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
     "f64": 8, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+    # token-typed values (infeed/outfeed/callback sequencing) carry no data.
+    "token": 0,
 }
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
-_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+# Two HLO text dialects cross this parser: the post-SPMD *optimized* dump
+# (names carry a % sigil, headers carry a parameter signature) and the
+# *unoptimized* `lower().compiler_ir("hlo")` text (no sigils, headers may
+# be just `ENTRY main.15 {`).  The sigil is optional everywhere a name is
+# *defined*; _OPERAND deliberately still requires it — operand extraction
+# from free-form attribute text is only reliable on the optimized dialect.
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:[({]|$)")
 _TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# Tuple-shaped results parse through one nesting level — enough for the
+# (buffer, (aux, aux)) tuples XLA emits; non-greedy `\(.*?\)` broke there.
 _INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\]"
     r"(?:\{[^}]*\})?)\s*([\w\-]+)\((.*)$")
 _SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _OPERAND = re.compile(r"%([\w\.\-]+)")

@@ -128,7 +128,7 @@ class ModelConfig:
             n += d * self.vocab_size                  # head
         attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
             + self.n_heads * hd * d
-        for layer in range(self.n_layers):
+        for _ in range(self.n_layers):
             n += attn
             if self.is_moe:
                 n += d * self.n_experts               # router

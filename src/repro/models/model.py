@@ -311,8 +311,8 @@ def _run_xlstm(params, cfg: ModelConfig, x, states=None,
         mp, sp, norms, mst, sst = scanned
         new_mst, new_sst = [], None
         for i in range(rep - 1):
-            bp = jax.tree.map(lambda a: a[i], mp)
-            st = jax.tree.map(lambda a: a[i], mst)
+            bp = jax.tree.map(lambda a, i=i: a[i], mp)
+            st = jax.tree.map(lambda a, i=i: a[i], mst)
             h = rms_norm(xc, norms["norm_0"][i], cfg.norm_eps)
             out, st_new = apply_mlstm(bp, h, cfg, state=st,
                                       single_step=single_step)

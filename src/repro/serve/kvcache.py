@@ -123,7 +123,7 @@ class SimPagedKVCache:
         slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
         freed = 0
         keep = []
-        for i, key in enumerate(self._entries[page]):
+        for key in self._entries[page]:
             if TABLE_CODEC.decode(key, "seq") == seq_id:
                 self._free.append(TABLE_CODEC.decode(key, "phys"))
                 freed += 1

@@ -1,0 +1,6 @@
+# Known-good / known-bad fixture modules for the repro.analysis contract
+# linter (tests/test_analysis_contracts.py).  Each *_tp.py module carries
+# deliberate violations; each *_tn.py is the compliant twin.  The
+# `# analysis: pretend-path=` pragma re-homes a fixture so path-scoped
+# rules (SIM002-004) treat it as an in-scope file.  These modules are
+# PARSED, never imported by product code.

@@ -1,0 +1,25 @@
+# analysis: pretend-path=src/repro/fixtures/sim001_tn.py
+"""SIM001 true negatives: flushed bursts and deferred-result scopes."""
+
+
+def flushed_burst(backend, cmds):
+    tickets = [backend.submit_search(c) for c in cmds]
+    backend.flush()
+    return [t.result() for t in tickets]
+
+
+def submit_only(backend, cmd):
+    # Returning the ticket hands resolution to the caller — not a drop.
+    return backend.submit_search(cmd)
+
+
+def deferred_result(backend, cmd):
+    t = backend.submit_search(cmd)
+
+    def resolve():
+        # nested def is its own scope; cross-scope flow is the launch
+        # audit's job, not the AST rule's
+        return t.result()
+
+    backend.flush()
+    return resolve

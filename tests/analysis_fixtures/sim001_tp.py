@@ -1,0 +1,17 @@
+# analysis: pretend-path=src/repro/fixtures/sim001_tp.py
+"""SIM001 true positives: dropped tickets and un-flushed .result()."""
+
+
+def drops_ticket(backend, cmd):
+    # The ticket is discarded: nothing can ever verify it resolved.
+    backend.submit_search(cmd)
+
+
+def result_without_flush(backend, cmd):
+    t = backend.submit_search(cmd)
+    return t.result()      # no flush between submit and result
+
+
+def mixed_burst(backend, cmds):
+    tickets = [backend.submit_gather(c) for c in cmds]
+    return [t.result() for t in tickets]   # flush never called

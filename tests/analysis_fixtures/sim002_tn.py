@@ -1,0 +1,17 @@
+# analysis: pretend-path=src/repro/core/engine.py
+"""SIM002 true negative: every page mutation notifies the observers."""
+
+
+class FixtureChip:
+    def __init__(self, pages):
+        self.pages = pages
+
+    def _notify(self, local):
+        pass
+
+    def notified_rewrite(self, local, image):
+        self.pages[local] = image
+        self._notify(local)
+
+    def read_only(self, local):
+        return self.pages[local]       # loads never need a notify

@@ -1,0 +1,10 @@
+# analysis: pretend-path=src/repro/core/engine.py
+"""SIM002 true positive: page mutation without an observer notify."""
+
+
+class FixtureChip:
+    def __init__(self, pages):
+        self.pages = pages       # __init__ is exempt by design
+
+    def silent_rewrite(self, local, image):
+        self.pages[local] = image      # no _notify -> stale arena rows

@@ -1,0 +1,23 @@
+# analysis: pretend-path=src/repro/backend/fixture_flush.py
+"""SIM003 true negatives: host tail deferred, host values freely cast."""
+import numpy as np
+
+
+def sim_search(lo, hi, q, m):
+    return lo
+
+
+def _flush_searches(lo, hi, q, m, cmds):
+    out = sim_search(lo, hi, q, m)
+    n = int(len(cmds))              # host value: int() here is fine
+
+    def tail(out=out):
+        # nested def = deferred tail, runs after the flush returns
+        return np.asarray(out)[:n]
+
+    return tail
+
+
+def resolve_burst(out):
+    # not a hot-scope name: the drain path MAY sync
+    return np.asarray(out)

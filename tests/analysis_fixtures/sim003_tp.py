@@ -1,0 +1,15 @@
+# analysis: pretend-path=src/repro/backend/fixture_flush.py
+"""SIM003 true positives: host syncs on launch outputs inside the flush."""
+import numpy as np
+
+
+def sim_search(lo, hi, q, m):
+    return lo
+
+
+def _flush_searches(lo, hi, q, m):
+    out = sim_search(lo, hi, q, m)
+    host = np.asarray(out)          # device->host copy at flush time
+    total = int(out[0])             # blocking scalar sync at flush time
+    out.block_until_ready()         # explicit barrier in the hot path
+    return host, total

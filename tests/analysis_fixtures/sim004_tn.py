@@ -1,0 +1,17 @@
+# analysis: pretend-path=src/repro/backend/fixture_stats.py
+"""SIM004 true negatives: counters move only in accounting helpers."""
+
+
+class FixtureBackend:
+    def flush(self):
+        self.stats.flushes += 1
+
+    def _flush_searches(self, searches):
+        self.stats.kernel_launches += 1
+
+        def tail():
+            self.stats.result_bytes += 64
+        return tail
+
+    def submit_program(self, page, entries):
+        self.stats.programs_coalesced += 1

@@ -1,0 +1,10 @@
+# analysis: pretend-path=src/repro/backend/fixture_stats.py
+"""SIM004 true positives: BackendStats mutated outside the helpers."""
+
+
+class FixtureBackend:
+    def record_hit(self):
+        self.stats.result_bytes += 64      # not an accounting helper
+
+    def reset_counters(self):
+        self.stats = object()              # wholesale replacement

@@ -1,0 +1,160 @@
+"""Contract linter (repro.analysis): per-rule fixtures, baseline, CLI gate."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.__main__ import main
+from repro.analysis.baseline import (BaselineEntry, _parse_minimal,
+                                     apply_baseline, load_baseline,
+                                     write_baseline)
+from repro.analysis.contracts import parse_module, run_contracts
+from repro.analysis.findings import Finding, dedupe_slugs
+from repro.analysis.rules import RULES_BY_ID
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+
+def lint_fixture(name: str, rule_id: str) -> list[Finding]:
+    findings = run_contracts(ROOT, paths=[FIXTURES / name],
+                             rules=[RULES_BY_ID[rule_id]])
+    return [f for f in findings if f.rule == rule_id]
+
+
+def slugs(findings) -> set:
+    return {f.slug for f in findings}
+
+
+# ------------------------------------------------------------ rule fixtures
+def test_sim001_true_positives():
+    found = lint_fixture("sim001_tp.py", "SIM001")
+    assert "dropped:submit_search" in slugs(found)
+    assert "result-no-flush:submit_search" in slugs(found)
+    assert "result-no-flush:submit_gather" in slugs(found)
+    symbols = {f.symbol for f in found}
+    assert {"drops_ticket", "result_without_flush", "mixed_burst"} <= symbols
+
+
+def test_sim001_true_negatives():
+    assert lint_fixture("sim001_tn.py", "SIM001") == []
+
+
+def test_sim002_true_positives():
+    found = lint_fixture("sim002_tp.py", "SIM002")
+    assert slugs(found) == {"mutates:pages"}
+    assert found[0].symbol == "FixtureChip.silent_rewrite"
+    # the pragma re-homed the fixture into the rule's scope
+    assert found[0].path == "src/repro/core/engine.py"
+
+
+def test_sim002_true_negatives():
+    assert lint_fixture("sim002_tn.py", "SIM002") == []
+
+
+def test_sim003_true_positives():
+    found = lint_fixture("sim003_tp.py", "SIM003")
+    assert {"host-sync:np.asarray", "host-sync:int",
+            "host-sync:block_until_ready"} <= slugs(found)
+    assert all(f.symbol == "_flush_searches" for f in found)
+
+
+def test_sim003_true_negatives():
+    assert lint_fixture("sim003_tn.py", "SIM003") == []
+
+
+def test_sim004_true_positives():
+    found = lint_fixture("sim004_tp.py", "SIM004")
+    assert {"mutates:result_bytes", "mutates:<stats>"} <= slugs(found)
+
+
+def test_sim004_true_negatives():
+    assert lint_fixture("sim004_tn.py", "SIM004") == []
+
+
+def test_pragma_rehomes_fixture():
+    mod = parse_module(FIXTURES / "sim002_tp.py", ROOT)
+    assert mod.rel_path == "src/repro/core/engine.py"
+    assert mod.real_path.endswith("tests/analysis_fixtures/sim002_tp.py")
+
+
+# ------------------------------------------------------------------ baseline
+def test_baseline_roundtrip(tmp_path):
+    findings = [
+        Finding("SIM001", "src/a.py", "f", 'dropped:submit_search',
+                message='reason with "quotes" and \\ backslash'),
+        Finding("SIM004", "src/b.py", "C.g", "mutates:flushes"),
+    ]
+    path = tmp_path / "baseline.toml"
+    write_baseline(path, findings)
+    entries = load_baseline(path)
+    assert {e.key() for e in entries} == {f.key() for f in findings}
+    # reasons default to the finding message, escaping intact
+    by_key = {e.key(): e for e in entries}
+    assert by_key[findings[0].key()].reason == \
+        'reason with "quotes" and \\ backslash'
+
+    new, accepted, stale = apply_baseline(findings, entries)
+    assert new == [] and len(accepted) == 2 and stale == []
+
+    extra = Finding("SIM002", "src/c.py", "h", "mutates:pages")
+    new, _, _ = apply_baseline(findings + [extra], entries)
+    assert new == [extra]
+
+    _, _, stale = apply_baseline([findings[0]], entries)
+    assert [e.key() for e in stale] == [findings[1].key()]
+
+
+def test_minimal_parser_matches_tomllib():
+    text = (ROOT / "src/repro/analysis/baseline.toml").read_text()
+    tomllib = pytest.importorskip("tomllib")
+    assert _parse_minimal(text) == tomllib.loads(text)
+
+
+def test_load_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.toml") == []
+
+
+def test_stale_entry_reported():
+    entry = BaselineEntry("SIM001", "gone.py", "f", "dropped:submit_x")
+    new, accepted, stale = apply_baseline([], [entry])
+    assert stale == [entry] and new == [] and accepted == []
+
+
+def test_dedupe_slugs_ordinal():
+    f = Finding("SIM001", "a.py", "f", "dropped:submit_search")
+    out = dedupe_slugs([f, f, f])
+    assert [x.slug for x in out] == [
+        "dropped:submit_search", "dropped:submit_search#2",
+        "dropped:submit_search#3"]
+
+
+# ----------------------------------------------------------------- CLI gate
+def test_repo_lint_is_clean_under_baseline(capsys):
+    assert main(["--check", "--no-audit"]) == 0
+    err = capsys.readouterr().err
+    assert "0 new finding(s)" in err
+    assert "0 stale baseline entr" in err
+
+
+def test_fixture_violations_trip_the_gate(capsys):
+    rc = main(["--check", "--no-audit", "--paths", str(FIXTURES)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    # all four rules fire on the fixture set
+    for rule in ("SIM001", "SIM002", "SIM003", "SIM004"):
+        assert rule in out
+
+
+def test_unknown_rule_id_rejected():
+    with pytest.raises(SystemExit):
+        main(["--no-audit", "--rules", "SIM999"])
+
+
+def test_write_baseline_preserves_reasons(tmp_path):
+    findings = [Finding("SIM001", "src/a.py", "f", "dropped:submit_search",
+                        message="msg")]
+    path = tmp_path / "b.toml"
+    write_baseline(path, findings,
+                   reasons={findings[0].key(): "reviewed: intentional"})
+    entries = load_baseline(path)
+    assert entries[0].reason == "reviewed: intentional"

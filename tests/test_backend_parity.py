@@ -202,7 +202,7 @@ def test_fused_lookup_parity_vs_scalar_split(backends):
     bb.flush()
     assert bb.stats.kernel_launches == launches + 1   # whole burst, 1 launch
     saw_hit = saw_miss = False
-    for c, a, b in zip(cmds, ts, tb):
+    for _c, a, b in zip(cmds, ts, tb):
         ra, rb = a.result(), b.result()
         np.testing.assert_array_equal(ra.search.bitmap_words,
                                       rb.search.bitmap_words)

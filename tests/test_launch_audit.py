@@ -1,0 +1,106 @@
+"""Launch auditor (repro.analysis.launch_audit): jaxpr gate behavior."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.backend.batched as batched_mod
+from repro.analysis.launch_audit import (FORBIDDEN_PRIMITIVES, audit_backend,
+                                         iter_eqns, record_launches,
+                                         summarize_jaxpr)
+
+
+# ------------------------------------------------------------ jaxpr walking
+def test_iter_eqns_recurses_through_pjit():
+    @jax.jit
+    def inner(x):
+        return jnp.sin(x) + 1.0
+
+    def outer(x):
+        return inner(x) * 2.0
+
+    closed = jax.make_jaxpr(outer)(jnp.ones(4))
+    prims = {e.primitive.name for e in iter_eqns(closed.jaxpr)}
+    assert "sin" in prims          # only visible through the pjit body
+
+
+def test_forbidden_primitive_detected():
+    def f(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    s = summarize_jaxpr(jax.make_jaxpr(f)(jnp.ones(4)))
+    assert "pure_callback" in s.forbidden
+    assert set(s.forbidden) <= FORBIDDEN_PRIMITIVES
+
+
+def test_summary_bytes_and_signature():
+    def f(x, y):
+        return x @ y
+
+    closed = jax.make_jaxpr(f)(jnp.ones((2, 3), jnp.float32),
+                               jnp.ones((3, 4), jnp.float32))
+    s = summarize_jaxpr(closed)
+    assert s.in_bytes == 4 * (6 + 12)
+    assert s.out_bytes == 4 * 8
+    assert s.signature == (((2, 3), "float32"), ((3, 4), "float32"))
+    assert s.n_pallas == 0 and s.forbidden == ()
+
+
+# -------------------------------------------------------------- the recorder
+def test_recorder_restores_entry_points():
+    orig = batched_mod.sim_search
+    with record_launches("batched") as records:
+        assert batched_mod.sim_search is not orig
+    assert batched_mod.sim_search is orig
+    assert records == []
+
+
+# ----------------------------------------------------------- the full audits
+def test_batched_audit_is_clean():
+    findings = audit_backend("batched", hlo=True)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_sharded_audit_is_clean():
+    findings = audit_backend("sharded", hlo=True)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# ------------------------------------------------------------- gate tripping
+def test_second_pallas_call_trips_sim101(monkeypatch):
+    """Doctor sim_search to launch twice; the audit must flag every search
+    phase (value-identical, so only the launch *shape* differs)."""
+    orig = batched_mod.sim_search
+
+    def doubled(*args, **kwargs):
+        first = orig(*args, **kwargs)
+        again = orig(*args, **kwargs)
+        return first | (again & 0)     # second launch contributes nothing
+
+    monkeypatch.setattr(batched_mod, "sim_search", doubled)
+    findings = audit_backend("batched", hlo=False)
+    bad = [f for f in findings
+           if f.rule == "SIM101" and f.slug == "pallas-count:sim_search"]
+    assert bad, "doctored double-launch sim_search was not flagged"
+    assert {f.symbol for f in bad} >= {"search-cold", "search-warm"}
+
+
+def test_callback_in_flush_trips_sim102(monkeypatch):
+    """Doctor sim_search with a host callback; the audit must flag it."""
+    orig = batched_mod.sim_search
+
+    def with_callback(lo, hi, q, m, **kwargs):
+        probe = jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(q.shape, q.dtype), q)
+        return orig(lo, hi, probe, m, **kwargs)
+
+    monkeypatch.setattr(batched_mod, "sim_search", with_callback)
+    findings = audit_backend("batched", hlo=False)
+    assert any(f.rule == "SIM102" and "pure_callback" in f.message
+               for f in findings)
+
+
+def test_unknown_backend_kind_rejected():
+    with pytest.raises(KeyError):
+        with record_launches("scalar"):
+            pass

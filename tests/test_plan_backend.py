@@ -230,7 +230,7 @@ def test_ycsb_scan_replay_bit_identical():
         outs[name] = run_functional(wl, make(), burst=32, fused=True)
     ref = outs["scalar"]
     n_keys = 4 * 504
-    for name, r in outs.items():
+    for r in outs.values():
         np.testing.assert_array_equal(ref.read_values, r.read_values)
         np.testing.assert_array_equal(ref.scan_counts, r.scan_counts)
         assert r.n_scans == ref.n_scans > 0

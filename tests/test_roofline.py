@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_analysis import analyze_hlo, parse_computations
+from repro.launch.hlo_analysis import (_shape_bytes, analyze_hlo,
+                                       parse_computations)
 from repro.launch.roofline import Roofline, model_flops
 from repro.models.config import SHAPES
 from repro.configs import ARCHS
@@ -119,3 +120,56 @@ ENTRY %main.2 (x: f32[4]) -> f32[4] {
     comps = parse_computations(hlo)
     assert set(comps) == {"helper.1", "main.2"}
     assert comps["main.2"].is_entry and not comps["helper.1"].is_entry
+
+
+def test_parse_unoptimized_hlo_dialect():
+    """`lower().compiler_ir("hlo")` text: no % sigils, bare `ENTRY name {`
+    headers — the dialect the launch auditor's byte cross-check parses."""
+    hlo = """\
+HloModule jit_pure, entry_computation_layout={(u32[4,8]{1,0})->(u32[4]{0}, s32[])}
+
+ENTRY main.15 {
+  Arg_0.1 = u32[4,8]{1,0} parameter(0)
+  reduce.9 = u32[4]{0} reduce(Arg_0.1), dimensions={1}, to_apply=region_0.5
+  constant.2 = s32[] constant(7)
+  ROOT tuple.14 = (u32[4]{0}, s32[]) tuple(reduce.9, constant.2)
+}
+"""
+    comps = parse_computations(hlo)
+    assert "HloModule" not in comps
+    entry = next(c for c in comps.values() if c.is_entry)
+    assert entry.name == "main.15"
+    params = [i for i in entry.instrs if i.op == "parameter"]
+    assert sum(_shape_bytes(i.type_str) for i in params) == 4 * 8 * 4
+    assert entry.instrs[-1].op == "tuple"
+    assert _shape_bytes(entry.instrs[-1].type_str) == 4 * 4 + 4
+
+
+def test_parse_lowered_compiler_ir_roundtrip():
+    """Live check against whatever jax currently emits: entry parameter and
+    ROOT bytes parsed from the unoptimized dump match the known shapes."""
+    def f(x, y):
+        return x + y, jnp.sum(x)
+
+    x = jnp.ones((4, 8), jnp.float32)
+    text = jax.jit(f).lower(x, x).compiler_ir(dialect="hlo").as_hlo_text()
+    comps = parse_computations(text)
+    entry = next(c for c in comps.values() if c.is_entry)
+    params = [i for i in entry.instrs if i.op == "parameter"]
+    assert sum(_shape_bytes(i.type_str) for i in params) == 2 * 4 * 8 * 4
+    assert _shape_bytes(entry.instrs[-1].type_str) == 4 * 8 * 4 + 4
+
+
+def test_shape_bytes_token_and_nested_tuple():
+    assert _shape_bytes("token[]") == 0
+    assert _shape_bytes("(f32[2]{0}, token[])") == 8
+    assert _shape_bytes("(f32[2]{0}, (s32[], u8[3]))") == 8 + 4 + 3
+
+
+def test_instr_regex_one_level_nested_tuple():
+    text = ("ENTRY main.1 {\n"
+            "  ROOT t.1 = ((f32[2]{0}, s32[]), u8[4]{0}) tuple(a.1, b.2)\n"
+            "}\n")
+    root = parse_computations(text)["main.1"].instrs[-1]
+    assert root.op == "tuple"
+    assert _shape_bytes(root.type_str) == 8 + 4 + 4

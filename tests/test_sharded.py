@@ -128,7 +128,7 @@ def test_search_bitmaps_bit_identical_across_geometries(backends):
             assert be.stats.kernel_launches == before + 1
         results[name] = [t.result() for t in ts]
     ref = results["scalar"]
-    for name, got in results.items():
+    for got in results.values():
         for a, b in zip(ref, got):
             np.testing.assert_array_equal(a.bitmap_words, b.bitmap_words)
             assert a.match_count == b.match_count

@@ -59,7 +59,8 @@ def test_cache_read_hit_keeps_dirty_bit():
     c.insert(1, dirty=True)
     assert c.lookup(1)
     ev = c.insert(2, dirty=False)
-    c.insert(3, dirty=False), c.insert(4, dirty=False)
+    c.insert(3, dirty=False)
+    c.insert(4, dirty=False)
     ev = c.insert(5, dirty=False)
     assert ev == [(1, True)]          # still dirty when finally evicted
 
@@ -113,7 +114,7 @@ def test_baseline_read_priority_timelines_independent():
     p = _mini_params()
     s = SSDSim(p, n_index_pages=128, cache_pages=0, system="sim")
     # saturate die 0 with programs, then read from it: sense not delayed
-    for i in range(4):
+    for _ in range(4):
         s._program(0, 0.0)
     t = s._sense(0, 0.0)
     assert t == p.t_read_ns                       # read-priority suspend

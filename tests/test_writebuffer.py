@@ -48,7 +48,9 @@ def test_writebuffer_coalesces_and_overlays():
     assert wb.stats.writes == 2 and wb.stats.coalesced == 1
     assert wb.stats.read_hits == 2
     assert wb.n_dirty == 1 and not wb.should_flush
-    wb.put(8, b), wb.put(9, b), wb.put(10, b)
+    wb.put(8, b)
+    wb.put(9, b)
+    wb.put(10, b)
     assert wb.should_flush and wb.stats.max_dirty == 4
 
 
@@ -298,3 +300,38 @@ def test_run_scan_latency_not_in_write_path():
     assert 0 < r.scans < n_scan + 1
     assert 0 < r.writes < n_write + 1
     assert r.scans + r.writes <= n_scan + n_write
+
+
+# --------------------------------------------------------------------------
+
+def test_flush_raises_on_unresolved_program_tickets():
+    """SIM001 regression: flush() must verify every buffered page program
+    resolved in THIS backend flush.  A backend that defers the program to a
+    later burst would break read-your-writes once the overlay is clean."""
+
+    class _StuckTicket:
+        done = False
+
+    class _DeferringBackend:
+        def submit_program(self, page_addr, entries, **kw):
+            return _StuckTicket()
+
+        def flush(self):
+            pass        # leaves the ticket unresolved
+
+    buf = WriteBuffer(high_water=4)
+    buf.put(3, np.arange(8, dtype=np.uint64))
+    with pytest.raises(RuntimeError, match="unresolved"):
+        buf.flush(_DeferringBackend())
+    # the dirty set drained before the check: no double-program on retry
+    assert buf.n_dirty == 0
+
+
+def test_flush_counts_resolved_programs():
+    chips = SimChipArray(n_chips=2, pages_per_chip=16, device_seed=5)
+    backend = make_backend("batched", chips, page_block=8)
+    buf = WriteBuffer(high_water=4)
+    buf.put(0, np.arange(8, dtype=np.uint64))
+    buf.put(1, np.arange(8, 16, dtype=np.uint64))
+    assert buf.flush(backend) == 2
+    assert buf.stats.programs == 2 and buf.stats.flushes == 1
