@@ -14,6 +14,15 @@ name, each with its own tolerance discipline:
     measured in the same process, so machine speed cancels out.  They must
     stay above both an absolute floor (the gates the benchmark itself
     asserts, e.g. sharded 16-chip >= 2x) and ``RATIO_KEEP`` of baseline.
+  * reliability counters (``reliability_*``) — the BER sweep's exact
+    outcome counts (retries, fallback reads, refreshes, typed errors,
+    unverified wrong-op counts).  Fault injection and sense noise are
+    fully seeded, so these are deterministic and gated exactly, like the
+    byte counters.  Two of them are additionally ``HARD_ZEROS``: the
+    verified pipeline's wrong-result count and the cross-backend
+    divergence count must be zero in the FRESH run regardless of what any
+    baseline says — a nonzero value is a correctness bug, not a
+    regression.
   * timing metrics (everything else) — wall microseconds depend on the
     machine, and the committed baseline was measured on a dev container,
     not a GitHub runner: a gross slowdown (> ``TIMING_SLOWDOWN`` x
@@ -44,9 +53,15 @@ RATIO_FLOORS = {           # ...but never dip below the hard gates
     "plan_fused_speedup": 2.0,
     "write_coalesce_speedup": 2.0,
 }
+HARD_ZEROS = {             # must be 0 in every fresh run, baseline or not
+    "reliability_wrong_results_verified",
+    "reliability_backend_mismatch",
+}
 
 
 def classify(name: str) -> str:
+    if name.startswith("reliability_"):
+        return "counter"
     if "speedup" in name:
         return "ratio"
     if "_bytes" in name or "_programs" in name:
@@ -62,6 +77,13 @@ def check(fresh: dict, baseline: dict) -> tuple[list[str], list[str]]:
     seen: dict[str, int] = {}
     failures: list[str] = []
     warnings: list[str] = []
+    # Correctness zeros gate on the FRESH run alone: even a freshly
+    # regenerated baseline must never grandfather a wrong result in.
+    for name in sorted(HARD_ZEROS & fresh_by_name.keys()):
+        for val in fresh_by_name[name]:
+            if val != 0:
+                failures.append(f"{name}: {val} != 0 (correctness "
+                                "hard-zero, independent of baseline)")
     for m in baseline["metrics"]:
         name, base = m["name"], float(m["value"])
         idx = seen.get(name, 0)

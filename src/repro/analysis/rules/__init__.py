@@ -3,8 +3,9 @@ from .sim001_tickets import Sim001Tickets
 from .sim002_observers import Sim002Observers
 from .sim003_hostsync import Sim003HostSync
 from .sim004_counters import Sim004Counters
+from .sim005_verdicts import Sim005Verdicts
 
 ALL_RULES = (Sim001Tickets(), Sim002Observers(), Sim003HostSync(),
-             Sim004Counters())
+             Sim004Counters(), Sim005Verdicts())
 
 RULES_BY_ID = {r.rule_id: r for r in ALL_RULES}

@@ -178,15 +178,23 @@ class Ticket:
     without another flush).
     """
 
-    __slots__ = ("_backend", "_value", "_batch")
+    __slots__ = ("_backend", "_value", "_batch", "_exc")
 
     def __init__(self, backend: "MatchBackend"):
         self._backend = backend
         self._value = None
         self._batch = None
+        self._exc = None
 
     def _resolve(self, value) -> None:
         self._value = value
+        self._batch = None
+
+    def _fail(self, exc: BaseException) -> None:
+        """Resolve the ticket to a typed per-command error (e.g. an
+        UncorrectableReadError from the reliability tier): ``result()``
+        raises it instead of returning a wrong response."""
+        self._exc = exc
         self._batch = None
 
     def _defer(self, batch: LazyResultBatch) -> None:
@@ -194,13 +202,17 @@ class Ticket:
 
     @property
     def done(self) -> bool:
-        return self._value is not None or self._batch is not None
+        return (self._value is not None or self._batch is not None
+                or self._exc is not None)
 
     def result(self):
-        if self._value is None and self._batch is None:
+        if self._value is None and self._exc is None and self._batch is None:
             self._backend.flush()
-        if self._value is None and self._batch is not None:
+        if self._value is None and self._exc is None \
+                and self._batch is not None:
             self._batch.run()
+        if self._exc is not None:
+            raise self._exc
         if self._value is None:
             raise RuntimeError("flush() left a submitted ticket unresolved")
         return self._value
@@ -212,10 +224,31 @@ class MatchBackend(abc.ABC):
     def __init__(self, chips: SimChipArray):
         self.chips = chips
         self.stats = BackendStats()
+        # Reliability tier (repro.reliability.ReliabilityState) or None.
+        # When attached, flush() runs an optimistic open burst over every
+        # touched page and routes responses through the vote/verify/
+        # fallback finalize paths; uncorrectable pages fail their tickets
+        # with a typed error instead of resolving a wrong bitmap.
+        self.reliability = None
         # Deferred Op.PROGRAM queue: page addr -> [entries, kwargs, tickets].
         # A dict so repeated programs of one page coalesce last-wins before
         # anything touches the chip (insertion order = program order).
         self._program_queue: dict[int, list] = {}
+
+    def enable_reliability(self, state) -> None:
+        """Attach a reliability tier to this backend's flush path.  Usually
+        called through ``ReliabilityState.install`` /
+        ``run_functional(..., reliability=...)``."""
+        self.reliability = state
+
+    def _open_reliability(self, page_addrs) -> dict:
+        """Flush-time ECC-aware open burst over the flush's unique pages;
+        {} when no reliability tier is attached.  Must run before kernel
+        backends stage plane rows so open-time repairs ship corrected
+        rows in the same flush."""
+        if self.reliability is None:
+            return {}
+        return self.reliability.open_burst(self.chips, page_addrs)
 
     # ------------------------------------------------------------- storage
     # Programming and full-page reads are storage-mode operations; both

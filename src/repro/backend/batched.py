@@ -42,11 +42,14 @@ staging of burst k+1 with device compute of burst k, and
 
 Results are bit-identical to ``ScalarBackend`` for every programmed page
 (damaged or not): both paths match against the same stored image with the
-same stream.  What this backend does *not* model is the per-page-open
-control machinery — optimistic-open verdicts, ECC fallback repair, latch
-pipelining — so ``SearchResponse.open_verdict`` always reads CLEAN here.
-Workloads that need open verdicts (error-injection studies) use the scalar
-backend; see tests/test_backend_parity.py for the exact contract.
+same stream.  Without a reliability tier attached,
+``SearchResponse.open_verdict`` always reads CLEAN here (no per-page-open
+control machinery runs).  With ``enable_reliability`` the flush performs
+the same optimistic open burst as the scalar reference — verdicts, ECC
+fallback repairs, voting and selective verification included — and
+uncorrectable pages fail their tickets with a typed error; see
+tests/test_backend_parity.py and tests/test_reliability.py for the exact
+contracts.
 
 Query rows are padded to the next power of two and page/gather/lookup rows
 to a power-of-two multiple of the block size (``padded_rows``), so repeated
@@ -87,8 +90,9 @@ from .planestore import PlaneStore, next_pow2, padded_rows
 # first ``result()`` call of a burst, not at flush.
 # ---------------------------------------------------------------------------
 
-def _resolve_bitmap_responses(chips, cmds, placements, out,
-                              matches_of) -> int:
+def _resolve_bitmap_responses(chips, cmds, placements, out, matches_of,
+                              reliability=None, opens=None,
+                              is_plan=False) -> int:
     """Resolve bitmap-shaped (search / plan) tickets from launch output.
 
     ``placements[i]`` is the index tuple of command i's bitmap in ``out``
@@ -100,33 +104,56 @@ def _resolve_bitmap_responses(chips, cmds, placements, out,
     is the on-chip match-op count the command's chip executed (1 for a
     search, ``n_passes`` for a plan).  Returns result bytes: 64 B per
     unique placement (shared cells cross the link once).
+
+    With a reliability tier attached, each unique cell's raw bitmap runs
+    the vote/verify/fallback finalize against the flush's captured page
+    opens; uncorrectable pages fail every ticket of the cell with the
+    typed error instead of resolving.
     """
-    cache: dict[tuple, tuple[np.ndarray, int]] = {}
+    from repro.reliability import UncorrectableReadError
+    cache: dict[tuple, tuple] = {}
+    n_ok = 0
     for (cmd, ticket), idx in zip(cmds, placements):
         entry = cache.get(idx)
         if entry is None:
-            bitmap = np.array(out[idx], copy=True)
-            entry = cache[idx] = (bitmap,
-                                  int(popcount_words(bitmap).sum()))
-        bitmap, count = entry
+            raw = np.array(out[idx], copy=True)
+            if reliability is None:
+                entry = ("ok", SearchResponse(
+                    bitmap_words=raw,
+                    match_count=int(popcount_words(raw).sum()),
+                    open_verdict=OpenVerdict.CLEAN.value))
+            else:
+                try:
+                    fin = (reliability.finalize_plan if is_plan
+                           else reliability.finalize_search)
+                    entry = ("ok", fin(chips, cmd, raw, opens))
+                except UncorrectableReadError as e:
+                    entry = ("err", e)
+            cache[idx] = entry
+            if entry[0] == "ok":
+                n_ok += 1
         chip, _ = chips.route(cmd.page_addr)
         chip.counters.searches += matches_of(cmd)
-        ticket._resolve(SearchResponse(
-            bitmap_words=bitmap, match_count=count,
-            open_verdict=OpenVerdict.CLEAN.value))
-    return 64 * len(cache)
+        if entry[0] == "ok":
+            ticket._resolve(entry[1])
+        else:
+            ticket._fail(entry[1])
+    return 64 * n_ok
 
 
-def resolve_search_responses(chips, searches, placements, out) -> int:
+def resolve_search_responses(chips, searches, placements, out,
+                             reliability=None, opens=None) -> int:
     return _resolve_bitmap_responses(chips, searches, placements, out,
-                                     lambda cmd: 1)
+                                     lambda cmd: 1, reliability, opens)
 
 
-def resolve_plan_responses(chips, plans, placements, out) -> int:
+def resolve_plan_responses(chips, plans, placements, out,
+                           reliability=None, opens=None) -> int:
     """A PLAN's chip executed ``n_passes`` match ops, but only the one
     combined 64 B bitmap per unique cell crossed — the Fig 10 win."""
     return _resolve_bitmap_responses(chips, plans, placements, out,
-                                     lambda cmd: cmd.n_passes)
+                                     lambda cmd: cmd.n_passes, reliability,
+                                     opens, is_plan=True)
 
 
 def snapshot_parities(chips, addrs) -> dict:
@@ -145,14 +172,24 @@ def snapshot_parities(chips, addrs) -> dict:
 
 
 def resolve_lookup_responses(chips, lookups, bm, val, slots,
-                             parity_snap) -> int:
+                             parity_snap, reliability=None,
+                             opens=None) -> int:
     """Fused-lookup host tail: batched de-randomize + inner-code verify of
     every hit's value chunk, then ticket resolution.
 
     ``bm`` (n, 16), ``val`` (n, 16), ``slots`` (n,) are the launch outputs
     trimmed to the burst length; ``parity_snap`` maps each value page to
     its flush-time ``snapshot_parities`` row.
+
+    With a reliability tier attached the on-device slot select and value
+    gather are advisory only: the finalize path re-derives the slot from
+    the voted/verified key bitmap and host-reads the value chunk from the
+    current image, so every backend serves byte-identical values under a
+    fault seed.
     """
+    if reliability is not None:
+        return _resolve_lookups_reliable(chips, lookups, bm, reliability,
+                                         opens)
     n = len(lookups)
     key_addrs = [cmd.page_addr for cmd, _ in lookups]
     val_addrs = [cmd.value_page for cmd, _ in lookups]
@@ -199,7 +236,31 @@ def resolve_lookup_responses(chips, lookups, bm, val, slots,
     return 64 * n + 64 * int(hit_idx.size)
 
 
-def resolve_gather_responses(chips, gathers, out, parity_snap) -> int:
+def _resolve_lookups_reliable(chips, lookups, bm, reliability, opens) -> int:
+    """Reliability tail for a lookup burst: finalize each key bitmap
+    (vote + selective verification + miss fallback) and serve the value
+    through the inner-code-checked host read."""
+    from repro.reliability import UncorrectableReadError
+    nbytes = 0
+    for a in {cmd.page_addr for cmd, _ in lookups}:
+        chip, _ = chips.route(a)
+        chip.counters.array_reads += 1
+    for i, (cmd, ticket) in enumerate(lookups):
+        chip, _ = chips.route(cmd.page_addr)
+        chip.counters.searches += 1
+        try:
+            resp = reliability.finalize_lookup(
+                chips, cmd, np.array(bm[i], copy=True), opens)
+        except UncorrectableReadError as e:
+            ticket._fail(e)
+            continue
+        ticket._resolve(resp)
+        nbytes += 64 + (64 if resp.value_slot is not None else 0)
+    return nbytes
+
+
+def resolve_gather_responses(chips, gathers, out, parity_snap,
+                             reliability=None, opens=None) -> int:
     """Gather host tail: one stream regeneration + one CRC pass for every
     selected chunk of the whole burst.  ``parity_snap`` holds each page's
     flush-time ``snapshot_parities`` row.  Returns result bytes (64 B per
@@ -234,8 +295,9 @@ def resolve_gather_responses(chips, gathers, out, parity_snap) -> int:
         plain_all = np.zeros((0, CHUNK_BYTES), dtype=np.uint8)
         parity_all = np.zeros(0, dtype=bool)
 
+    from repro.reliability import UncorrectableReadError
     pos = 0
-    for r, (_cmd, ticket) in enumerate(gathers):
+    for r, (cmd, ticket) in enumerate(gathers):
         chip, local = owners[r]
         chunk_ids = chunk_ids_per[r]
         k = int(chunk_ids.size)
@@ -245,8 +307,15 @@ def resolve_gather_responses(chips, gathers, out, parity_snap) -> int:
         chip.counters.array_reads += 1
         chip.counters.gathers += 1
         chip.counters.chunks_gathered += k
-        ticket._resolve(GatherResponse(chunks=plain, chunk_ids=chunk_ids,
-                                       parity_ok=parity_ok))
+        resp = GatherResponse(chunks=plain, chunk_ids=chunk_ids,
+                              parity_ok=parity_ok)
+        if reliability is not None:
+            try:
+                resp = reliability.finalize_gather(chips, cmd, resp, opens)
+            except UncorrectableReadError as e:
+                ticket._fail(e)
+                continue
+        ticket._resolve(resp)
     return 64 * k_total
 
 
@@ -319,19 +388,30 @@ class BatchedKernelBackend(MatchBackend):
         lookups, self._lookups = self._lookups, []
         gathers, self._gathers = self._gathers, []
         plans, self._plans = self._plans, []
+        # Reliability open burst BEFORE any staging: open-time ECC repairs
+        # mark their plane rows dirty, so rows_for re-stages the corrected
+        # images in this same flush.  The verdict dict is captured into the
+        # phase tails — later flushes may re-open these pages before the
+        # lazy tails run.
+        opens = self._open_reliability(
+            {c.page_addr for c, _ in searches}
+            | {c.page_addr for c, _ in plans}
+            | {c.page_addr for c, _ in gathers}
+            | {c.page_addr for c, _ in lookups}
+            | {c.value_page for c, _ in lookups})
         if searches:
-            self._flush_searches(searches)
+            self._flush_searches(searches, opens)
         if plans:
-            self._flush_plans(plans)
+            self._flush_plans(plans, opens)
         if lookups:
-            self._flush_lookups(lookups)
+            self._flush_lookups(lookups, opens)
         if gathers:
-            self._flush_gathers(gathers)
+            self._flush_gathers(gathers, opens)
         # The plane store is the only source of host->device page traffic.
         self.stats.staged_bytes = self.store.staged_bytes
 
     # ------------------------------------------------------------- staging
-    def _flush_searches(self, searches) -> None:
+    def _flush_searches(self, searches, opens=None) -> None:
         # Unique pages -> arena rows; unique (query, mask) -> operand rows.
         page_rows: dict[int, int] = {}
         query_rows: dict[tuple, int] = {}
@@ -376,13 +456,15 @@ class BatchedKernelBackend(MatchBackend):
         if len(searches) > 1:
             self.stats.batched_searches += len(searches)
 
-        def tail(out=out, searches=searches, placements=placements):
+        def tail(out=out, searches=searches, placements=placements,
+                 rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_search_responses(
-                self.chips, searches, placements, np.asarray(out))
+                self.chips, searches, placements, np.asarray(out),
+                rel, opens)
         self._defer_all(searches, tail)
 
     # ---------------------------------------------------------------- plans
-    def _flush_plans(self, plans) -> None:
+    def _flush_plans(self, plans, opens=None) -> None:
         """Fused multi-pass range plans: one launch, one 64 B bitmap/page.
 
         Unique pages dedup to arena rows exactly like searches; unique
@@ -433,13 +515,14 @@ class BatchedKernelBackend(MatchBackend):
                                          for i, e in groups)
         self.stats.plans += len(plans)
 
-        def tail(out=out, plans=plans, placements=placements):
+        def tail(out=out, plans=plans, placements=placements,
+                 rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_plan_responses(
-                self.chips, plans, placements, np.asarray(out))
+                self.chips, plans, placements, np.asarray(out), rel, opens)
         self._defer_all(plans, tail)
 
     # -------------------------------------------------------------- lookups
-    def _flush_lookups(self, lookups) -> None:
+    def _flush_lookups(self, lookups, opens=None) -> None:
         """Fused read burst: search + slot select + value gather, 1 launch."""
         key_addrs = [cmd.page_addr for cmd, _ in lookups]
         val_addrs = [cmd.value_page for cmd, _ in lookups]
@@ -467,14 +550,15 @@ class BatchedKernelBackend(MatchBackend):
         snap = snapshot_parities(self.chips, val_addrs)
 
         def tail(bm=bm, val=val, slots=slots, lookups=lookups, n=n,
-                 snap=snap):
+                 snap=snap, rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_lookup_responses(
                 self.chips, lookups, np.asarray(bm)[:n],
-                np.asarray(val)[:n], np.asarray(slots)[:n], snap)
+                np.asarray(val)[:n], np.asarray(slots)[:n], snap,
+                rel, opens)
         self._defer_all(lookups, tail)
 
     # -------------------------------------------------------------- gathers
-    def _flush_gathers(self, gathers) -> None:
+    def _flush_gathers(self, gathers, opens=None) -> None:
         addrs = [cmd.page_addr for cmd, _ in gathers]
         rows = self.store.rows_for(addrs)
         n = len(gathers)
@@ -493,7 +577,8 @@ class BatchedKernelBackend(MatchBackend):
         self.stats.gathers += n
         snap = snapshot_parities(self.chips, addrs)
 
-        def tail(out=out, gathers=gathers, n=n, snap=snap):
+        def tail(out=out, gathers=gathers, n=n, snap=snap,
+                 rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_gather_responses(
-                self.chips, gathers, np.asarray(out)[:n], snap)
+                self.chips, gathers, np.asarray(out)[:n], snap, rel, opens)
         self._defer_all(gathers, tail)

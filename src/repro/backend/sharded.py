@@ -65,6 +65,7 @@ import numpy as np
 
 from repro.core.bits import CHUNKS_PER_PAGE, popcount_words
 from repro.core.commands import Command, Op
+from repro.core.ecc import OpenVerdict
 from repro.core.engine import SimChipArray
 from repro.flash.params import (BITMAP_BYTES, CHUNK_BYTES, FlashParams,
                                 OPEN_OVERHEAD_BYTES, PAGE_BYTES)
@@ -139,7 +140,10 @@ class ShardedSsdBackend(MatchBackend):
     ``chips`` must hold ``channels * dies_per_channel`` chips (geometry
     defaults to one channel per chip).  Results are bit-identical to the
     scalar/batched backends over the same array; like the batched backend
-    it reports ``open_verdict`` CLEAN (use scalar for error injection).
+    it reports ``open_verdict`` CLEAN unless a reliability tier is
+    attached (``enable_reliability``), in which case the flush runs the
+    full optimistic open burst and charges read-retries and full-page ECC
+    fallback reads on the flash timelines.
     """
 
     def __init__(self, chips: SimChipArray, *, channels: int | None = None,
@@ -264,14 +268,30 @@ class ShardedSsdBackend(MatchBackend):
                  "gather": gathers, "plan": plans}[kind].append((cmd, t))
             queue.clear()
         bursts: dict[int, ChipBurst] = {}
+        # Reliability open burst before staging (open-time ECC repairs
+        # restage corrected rows in this flush); retries and full-page
+        # fallback reads charge the owning die's timeline record.
+        opens = self._open_reliability(
+            {c.page_addr for c, _ in searches}
+            | {c.page_addr for c, _ in plans}
+            | {c.page_addr for c, _ in gathers}
+            | {c.page_addr for c, _ in lookups}
+            | {c.value_page for c, _ in lookups})
+        if opens and self.timeline is not None:
+            for a, po in opens.items():
+                c, _ = self.decompose(a)
+                b = self._burst(bursts, c)
+                b.retry_senses += po.result.retries_used
+                if po.verdict is OpenVerdict.FALLBACK_ECC:
+                    b.fallback_reads += 1
         if searches:
-            self._flush_searches(searches, bursts)
+            self._flush_searches(searches, bursts, opens)
         if plans:
-            self._flush_plans(plans, bursts)
+            self._flush_plans(plans, bursts, opens)
         if lookups:
-            self._flush_lookups(lookups, bursts)
+            self._flush_lookups(lookups, bursts, opens)
         if gathers:
-            self._flush_gathers(gathers, bursts)
+            self._flush_gathers(gathers, bursts, opens)
         self.stats.staged_bytes = self.store.staged_bytes
         staged, self.store.staged_log = self.store.staged_log, []
         if self.timeline is not None:
@@ -285,9 +305,14 @@ class ShardedSsdBackend(MatchBackend):
         return bursts.setdefault(chip, ChipBurst(chip))
 
     # ------------------------------------------------------------- searches
-    def _flush_searches(self, searches, bursts) -> None:
+    def _flush_searches(self, searches, bursts, opens=None) -> None:
         # Per chip: unique pages -> arena rows; unique (query, mask) ->
         # operand rows; every command lands at one (chip, qi, pi) cell.
+        # Approximate-match voting re-senses each page vote_k times; the
+        # majority accumulates in-latch so still ONE bitmap crosses per
+        # command (mirrors the plan path's in-latch accumulation).
+        vf = self.reliability.vote_factor if self.reliability is not None \
+            else 1
         n = self.n_chips
         addrs: list[list[int]] = [[] for _ in range(n)]
         page_rows: list[dict[int, int]] = [{} for _ in range(n)]
@@ -327,7 +352,7 @@ class ShardedSsdBackend(MatchBackend):
             chip = self.chips.chips[c]
             chip.counters.array_reads += k     # one staged sense per page
             b = self._burst(bursts, c)
-            b.senses += k
+            b.senses += k * vf
             b.bus_match_bytes += OPEN_OVERHEAD_BYTES * k
         lo, hi, ids, seeds = self.store.take2d(idx2d)
         q = np.zeros((c_pad, q_pad, 2), dtype=np.uint32)
@@ -353,19 +378,21 @@ class ShardedSsdBackend(MatchBackend):
         for cmd, _ in searches:
             c, _local = self.decompose(cmd.page_addr)
             b = self._burst(bursts, c)
-            b.matches += 1
+            b.matches += vf
             b.bus_match_bytes += BITMAP_BYTES
             b.pcie_bytes += BITMAP_BYTES + QUERY_BYTES
 
         stacked = [(slot_of[c], qi, pi) for c, qi, pi in placements]
 
-        def tail(out=out, searches=searches, stacked=stacked):
+        def tail(out=out, searches=searches, stacked=stacked,
+                 rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_search_responses(
-                self.chips, searches, stacked, np.asarray(out))
+                self.chips, searches, stacked, np.asarray(out),
+                reliability=rel, opens=opens)
         self._defer_all(searches, tail)
 
     # --------------------------------------------------------------- plans
-    def _flush_plans(self, plans, bursts) -> None:
+    def _flush_plans(self, plans, bursts, opens=None) -> None:
         """Fused range plans, stacked across chips like searches.
 
         Per chip: unique pages -> arena rows, unique (include, exclude)
@@ -381,6 +408,8 @@ class ShardedSsdBackend(MatchBackend):
         page_rows: list[dict[int, int]] = [{} for _ in range(n)]
         group_rows: list[dict[tuple, int]] = [{} for _ in range(n)]
         groups: list[list[tuple]] = [[] for _ in range(n)]
+        vf = self.reliability.vote_factor if self.reliability is not None \
+            else 1
         placements = []                        # (chip, gi, pi)
         for cmd, _ in plans:
             c, _local = self.decompose(cmd.page_addr)
@@ -414,7 +443,7 @@ class ShardedSsdBackend(MatchBackend):
             chip = self.chips.chips[c]
             chip.counters.array_reads += k     # one staged sense per page
             b = self._burst(bursts, c)
-            b.senses += k
+            b.senses += k * vf
             b.bus_match_bytes += OPEN_OVERHEAD_BYTES * k
         lo, hi, ids, seeds = self.store.take2d(idx2d)
         q = np.zeros((c_pad, g_pad, p_pad, 2), dtype=np.uint32)
@@ -442,20 +471,24 @@ class ShardedSsdBackend(MatchBackend):
         for cmd, _ in plans:
             c, _local = self.decompose(cmd.page_addr)
             b = self._burst(bursts, c)
-            b.matches += cmd.n_passes          # every pass matches on-die
+            b.matches += cmd.n_passes * vf     # every pass matches on-die
             b.bus_match_bytes += BITMAP_BYTES  # ...but ONE bitmap crosses
             b.pcie_bytes += BITMAP_BYTES + QUERY_BYTES * cmd.n_passes
 
         stacked = [(slot_of[c], gi, pi) for c, gi, pi in placements]
 
-        def tail(out=out, plans=plans, stacked=stacked):
+        def tail(out=out, plans=plans, stacked=stacked,
+                 rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_plan_responses(
-                self.chips, plans, stacked, np.asarray(out))
+                self.chips, plans, stacked, np.asarray(out),
+                reliability=rel, opens=opens)
         self._defer_all(plans, tail)
 
     # -------------------------------------------------------------- lookups
-    def _flush_lookups(self, lookups, bursts) -> None:
+    def _flush_lookups(self, lookups, bursts, opens=None) -> None:
         """Row-stacked fused burst across every chip: ONE launch."""
+        vf = self.reliability.vote_factor if self.reliability is not None \
+            else 1
         key_addrs = [cmd.page_addr for cmd, _ in lookups]
         val_addrs = [cmd.value_page for cmd, _ in lookups]
         k_rows = self.store.rows_for(key_addrs)
@@ -477,17 +510,19 @@ class ShardedSsdBackend(MatchBackend):
         self.stats.lookups += n
         self.stats.staged_pages += len(set(key_addrs) | set(val_addrs))
         self.stats.staged_queries += n
-        for addrs in (set(key_addrs), set(val_addrs)):
+        # Key pages re-sense vote_k times for majority voting; value pages
+        # sense once (the chunk read is verified by parity, not by vote).
+        for addrs, senses in ((set(key_addrs), vf), (set(val_addrs), 1)):
             for a in addrs:                    # one open per unique page
                 c, _ = self.decompose(a)
                 b = self._burst(bursts, c)
-                b.senses += 1
+                b.senses += senses
                 b.bus_match_bytes += OPEN_OVERHEAD_BYTES
         for cmd, _ in lookups:
             kc, _ = self.decompose(cmd.page_addr)
             vc, _ = self.decompose(cmd.value_page)
             kb = self._burst(bursts, kc)
-            kb.matches += 1
+            kb.matches += vf
             kb.bus_match_bytes += BITMAP_BYTES
             kb.pcie_bytes += BITMAP_BYTES + QUERY_BYTES
             vb = self._burst(bursts, vc)
@@ -497,14 +532,15 @@ class ShardedSsdBackend(MatchBackend):
         snap = snapshot_parities(self.chips, val_addrs)
 
         def tail(bm=bm, val=val, slots=slots, lookups=lookups, n=n,
-                 snap=snap):
+                 snap=snap, rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_lookup_responses(
                 self.chips, lookups, np.asarray(bm)[:n],
-                np.asarray(val)[:n], np.asarray(slots)[:n], snap)
+                np.asarray(val)[:n], np.asarray(slots)[:n], snap,
+                reliability=rel, opens=opens)
         self._defer_all(lookups, tail)
 
     # -------------------------------------------------------------- gathers
-    def _flush_gathers(self, gathers, bursts) -> None:
+    def _flush_gathers(self, gathers, bursts, opens=None) -> None:
         addrs = [cmd.page_addr for cmd, _ in gathers]
         rows = self.store.rows_for(addrs)
         n = len(gathers)
@@ -523,9 +559,11 @@ class ShardedSsdBackend(MatchBackend):
         self.stats.gathers += n
         snap = snapshot_parities(self.chips, addrs)
 
-        def tail(out=out, gathers=gathers, n=n, snap=snap):
+        def tail(out=out, gathers=gathers, n=n, snap=snap,
+                 rel=self.reliability, opens=opens):
             self.stats.result_bytes += resolve_gather_responses(
-                self.chips, gathers, np.asarray(out)[:n], snap)
+                self.chips, gathers, np.asarray(out)[:n], snap,
+                reliability=rel, opens=opens)
         self._defer_all(gathers, tail)
         for cmd, _ in gathers:
             c, _local = self.decompose(cmd.page_addr)

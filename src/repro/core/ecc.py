@@ -23,6 +23,7 @@ Stale timestamp -> page is queued for refresh (rewrite) even when clean.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from enum import Enum
 
 import numpy as np
@@ -40,7 +41,11 @@ HEADER_USER_SLOTS = slice(3, 8)
 # Table-driven CRC-32 (Castagnoli) and CRC-64 (ECMA-182), vectorized in numpy.
 # --------------------------------------------------------------------------
 
-def _make_crc32_table(poly: int = 0x82F63B78) -> np.ndarray:
+_CRC32_POLY = 0x82F63B78            # Castagnoli, reflected
+_CRC64_POLY = 0xC96C5795D7870F42    # ECMA-182, reflected
+
+
+def _make_crc32_table(poly: int = _CRC32_POLY) -> np.ndarray:
     table = np.zeros(256, dtype=np.uint32)
     for i in range(256):
         crc = i
@@ -50,7 +55,7 @@ def _make_crc32_table(poly: int = 0x82F63B78) -> np.ndarray:
     return table
 
 
-def _make_crc64_table(poly: int = 0xC96C5795D7870F42) -> np.ndarray:
+def _make_crc64_table(poly: int = _CRC64_POLY) -> np.ndarray:
     table = np.zeros(256, dtype=np.uint64)
     for i in range(256):
         crc = i
@@ -64,23 +69,103 @@ _CRC32_TABLE = _make_crc32_table()
 _CRC64_TABLE = _make_crc64_table()
 
 
-def crc32(data: np.ndarray | bytes) -> int:
-    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
+def _as_u8(data: np.ndarray | bytes) -> np.ndarray:
+    return np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
         data, (bytes, bytearray)) else np.asarray(data, dtype=np.uint8).ravel()
+
+
+def _crc32_bytewise(data: np.ndarray | bytes) -> int:
+    """Reference per-byte CRC-32; kept as the property-test oracle and the
+    short-buffer path of the vectorized :func:`crc32`."""
+    buf = _as_u8(data)
     crc = np.uint32(0xFFFFFFFF)
     for b in buf:
         crc = _CRC32_TABLE[(crc ^ b) & np.uint32(0xFF)] ^ (crc >> np.uint32(8))
     return int(crc ^ np.uint32(0xFFFFFFFF))
 
 
-def crc64(data: np.ndarray | bytes) -> int:
-    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
-        data, (bytes, bytearray)) else np.asarray(data, dtype=np.uint8).ravel()
+def _crc64_bytewise(data: np.ndarray | bytes) -> int:
+    """Reference per-byte CRC-64 (see :func:`_crc32_bytewise`)."""
+    buf = _as_u8(data)
     crc = np.uint64(0xFFFFFFFFFFFFFFFF)
     for b in buf:
         crc = _CRC64_TABLE[(crc ^ np.uint64(b)) & np.uint64(0xFF)] ^ (
             crc >> np.uint64(8))
     return int(crc ^ np.uint64(0xFFFFFFFFFFFFFFFF))
+
+
+# GF(2) length-shift operators (the zlib crc32_combine construction): the
+# final CRC of A||B is  M_len(B) @ crc(A)  ^  crc(B), where M_n is the linear
+# operator that advances a (reflected, pre/post-conditioned) CRC register by
+# n zero bytes.  Splitting a buffer into equal rows therefore reduces a
+# whole-buffer CRC to ONE vectorized row-wise table pass plus a cheap
+# per-row fold with a cached matrix — no per-byte Python loop.
+
+def _gf2_times(mat: tuple[int, ...], vec: int) -> int:
+    s = 0
+    i = 0
+    while vec:
+        if vec & 1:
+            s ^= mat[i]
+        vec >>= 1
+        i += 1
+    return s
+
+
+def _gf2_square(mat: tuple[int, ...]) -> tuple[int, ...]:
+    return tuple(_gf2_times(mat, m) for m in mat)
+
+
+@functools.lru_cache(maxsize=None)
+def _shift_matrix(poly: int, width: int, len_bytes: int) -> tuple[int, ...]:
+    """Operator advancing a reflected CRC register by ``len_bytes`` zeros."""
+    op = (poly,) + tuple(1 << (i - 1) for i in range(1, width))  # 1-bit shift
+    op = _gf2_square(_gf2_square(op))                            # 4-bit shift
+    mat = tuple(1 << i for i in range(width))                    # identity
+    n = len_bytes
+    while n:
+        op = _gf2_square(op)        # 8, 16, 32, ... bit shifts
+        if n & 1:
+            mat = tuple(_gf2_times(op, m) for m in mat)
+        n >>= 1
+    return mat
+
+
+_ROW_BYTES = 64  # fold granularity of the vectorized single-buffer CRCs
+
+
+def _crc_fold(row_crcs: np.ndarray, tail: np.ndarray, poly: int, width: int,
+              bytewise) -> int:
+    """Fold per-row CRCs (rows of _ROW_BYTES each) + a short tail into the
+    stream CRC via the cached shift operators."""
+    shift_row = _shift_matrix(poly, width, _ROW_BYTES)
+    crc = int(row_crcs[0])
+    for r in row_crcs[1:]:
+        crc = _gf2_times(shift_row, crc) ^ int(r)
+    if tail.size:
+        crc = _gf2_times(_shift_matrix(poly, width, int(tail.size)), crc) \
+            ^ bytewise(tail)
+    return crc
+
+
+def crc32(data: np.ndarray | bytes) -> int:
+    buf = _as_u8(data)
+    if buf.size < 2 * _ROW_BYTES:
+        return _crc32_bytewise(buf)
+    full = buf.size // _ROW_BYTES
+    rows = crc32_rows(buf[:full * _ROW_BYTES].reshape(full, _ROW_BYTES))
+    return _crc_fold(rows, buf[full * _ROW_BYTES:], _CRC32_POLY, 32,
+                     _crc32_bytewise)
+
+
+def crc64(data: np.ndarray | bytes) -> int:
+    buf = _as_u8(data)
+    if buf.size < 2 * _ROW_BYTES:
+        return _crc64_bytewise(buf)
+    full = buf.size // _ROW_BYTES
+    rows = crc64_rows(buf[:full * _ROW_BYTES].reshape(full, _ROW_BYTES))
+    return _crc_fold(rows, buf[full * _ROW_BYTES:], _CRC64_POLY, 64,
+                     _crc64_bytewise)
 
 
 def crc32_rows(rows: np.ndarray) -> np.ndarray:
@@ -90,6 +175,20 @@ def crc32_rows(rows: np.ndarray) -> np.ndarray:
     for i in range(rows.shape[1]):
         crc = _CRC32_TABLE[(crc ^ rows[:, i]) & 0xFF] ^ (crc >> np.uint32(8))
     return crc ^ np.uint32(0xFFFFFFFF)
+
+
+def crc64_rows(rows: np.ndarray) -> np.ndarray:
+    """Row-wise CRC-64 over a (k, n) uint8 array -> (k,) uint64.
+
+    One table pass verifies every page's header body in a flush's open
+    burst (see :func:`parse_header_chunks`) instead of k per-byte loops.
+    """
+    rows = np.asarray(rows, dtype=np.uint8)
+    crc = np.full(rows.shape[0], 0xFFFFFFFFFFFFFFFF, dtype=np.uint64)
+    for i in range(rows.shape[1]):
+        crc = _CRC64_TABLE[(crc ^ rows[:, i]) & np.uint64(0xFF)] ^ (
+            crc >> np.uint64(8))
+    return crc ^ np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
 def crc32_chunks(page_bytes: np.ndarray) -> np.ndarray:
@@ -127,16 +226,33 @@ class Header:
     magic_ok: bool
 
 
-def parse_header_chunk(chunk_bytes: np.ndarray) -> Header:
-    words = bytes_to_slot_words(np.asarray(chunk_bytes, dtype=np.uint8))
+def _header_from_words(words: np.ndarray, body_crc: int) -> Header:
     crc_stored = pair_to_u64(*words[HEADER_CRC_SLOT])
     magic = pair_to_u64(*words[HEADER_MAGIC_SLOT])
     ts = pair_to_u64(*words[HEADER_TIMESTAMP_SLOT])
-    body = slot_words_to_bytes(words[1:])
     return Header(
         crc=crc_stored, magic=magic, timestamp_ns=ts,
         user=np.array(words[HEADER_USER_SLOTS]),
-        crc_ok=(crc64(body) == crc_stored), magic_ok=(magic == MAGIC))
+        crc_ok=(body_crc == crc_stored), magic_ok=(magic == MAGIC))
+
+
+def parse_header_chunk(chunk_bytes: np.ndarray) -> Header:
+    words = bytes_to_slot_words(np.asarray(chunk_bytes, dtype=np.uint8))
+    body = slot_words_to_bytes(words[1:])
+    return _header_from_words(words, crc64(body))
+
+
+def parse_header_chunks(chunk_bytes: np.ndarray) -> list[Header]:
+    """Parse many 64 B header chunks at once -> list of :class:`Header`.
+
+    The CRC-64 body check for every page runs as ONE :func:`crc64_rows`
+    table pass, so a flush-wide open burst doesn't pay a per-page CRC loop.
+    """
+    chunks = np.asarray(chunk_bytes, dtype=np.uint8).reshape(-1, CHUNK_BYTES)
+    body_crcs = crc64_rows(chunks[:, 8:])  # bytes of slots 1..7
+    return [_header_from_words(bytes_to_slot_words(chunks[i]),
+                               int(body_crcs[i]))
+            for i in range(chunks.shape[0])]
 
 
 # --------------------------------------------------------------------------
@@ -166,16 +282,21 @@ class OpenResult:
     bits_corrected: int = 0
 
 
-def optimistic_open(header_chunk: np.ndarray, *, now_ns: int,
+def optimistic_open(header_chunk: np.ndarray | None, *, now_ns: int,
                     injected_error_bits: int, cfg: EccConfig,
-                    rng: np.random.Generator | None = None) -> OpenResult:
+                    rng: np.random.Generator | None = None,
+                    header: Header | None = None) -> OpenResult:
     """Model the page-open decision tree of §IV-C2.
 
     ``injected_error_bits`` is the simulator's ground-truth raw bit-error
     count for the page (the header chunk's own errors are already reflected
     in the bytes passed in, so the CRC check is real, not modelled).
+    Callers that already parsed the header (e.g. a flush-wide open burst
+    through :func:`parse_header_chunks`) pass ``header=`` and may leave
+    ``header_chunk`` as None.
     """
-    header = parse_header_chunk(header_chunk)
+    if header is None:
+        header = parse_header_chunk(header_chunk)
     if header.crc_ok and header.magic_ok:
         if now_ns - header.timestamp_ns > cfg.refresh_margin_ns:
             return OpenResult(OpenVerdict.CLEAN_NEEDS_REFRESH, header)
@@ -188,7 +309,13 @@ def optimistic_open(header_chunk: np.ndarray, *, now_ns: int,
 
     # Read-retry loop with adjusted sensing voltage; the magic number gives
     # the controller a known-plaintext anchor for calibrating the retry.
-    rng = rng or np.random.default_rng(0)
+    if rng is None:
+        raise ValueError(
+            "optimistic_open reached the read-retry path without an RNG: "
+            "pass the owning chip's seeded generator.  A shared default "
+            "generator would replay the identical retry-outcome sequence "
+            "for every marginal page in the fleet, making retry statistics "
+            "degenerate.")
     for attempt in range(1, cfg.max_read_retries + 1):
         if rng.random() < cfg.retry_fix_prob:
             return OpenResult(OpenVerdict.FALLBACK_ECC, header,

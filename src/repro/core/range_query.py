@@ -80,13 +80,17 @@ def evaluate_plan_on_pages(backend: "MatchBackend", plan: RangePlan,
     (:func:`evaluate_plan_per_pass`).  Returns the combined
     (len(page_addrs), 16) uint32 slot bitmaps.
     """
+    from repro.reliability import require_clean
     tickets = [backend.submit_plan(Command.plan(p, plan.include,
                                                 plan.exclude))
                for p in page_addrs]
     backend.flush()
     out = np.zeros((len(page_addrs), 16), dtype=np.uint32)
     for i, t in enumerate(tickets):
-        out[i] = t.result().bitmap_words
+        # Propagates UncorrectableReadError from a reliability-tier backend
+        # — a page that failed outer-code decode must not contribute an
+        # all-zero bitmap that reads as "no keys in range".
+        out[i] = require_clean(t.result()).bitmap_words
     return out
 
 
@@ -100,6 +104,7 @@ def evaluate_plan_per_pass(backend: "MatchBackend", plan: RangePlan,
     ``range_plan`` section measures the fused kernel against — this path
     crosses 64 B per pass per page where PLAN crosses 64 B per page.
     """
+    from repro.reliability import require_clean
     include = [[backend.submit_search(Command.search(p, mq.query, mq.mask))
                 for mq in plan.include] for p in page_addrs]
     exclude = [[backend.submit_search(Command.search(p, mq.query, mq.mask))
@@ -109,9 +114,9 @@ def evaluate_plan_per_pass(backend: "MatchBackend", plan: RangePlan,
     for i in range(len(page_addrs)):
         acc = np.zeros(16, dtype=np.uint32)
         for t in include[i]:
-            acc |= t.result().bitmap_words
+            acc |= require_clean(t.result()).bitmap_words
         for t in exclude[i]:
-            acc &= ~t.result().bitmap_words
+            acc &= ~require_clean(t.result()).bitmap_words
         out[i] = acc
     return out
 
@@ -175,7 +180,16 @@ def exact_range(lo: int, hi: int, *, shift: int = 0,
 def false_positive_bound(plan: RangePlan, lo: int, hi: int,
                          width: int = 64) -> float:
     """Upper bound on the superset blow-up of an approximate plan under a
-    uniform key distribution (paper §V-C cites low error for uniform keys)."""
+    uniform key distribution (paper §V-C cites low error for uniform keys).
+
+    This bounds the *decomposition* error only: an exact plan has zero.
+    Under the reliability tier a second, independent error source exists —
+    per-sense bit flips in match mode (§IV-C3) — whose per-page
+    false-positive probability is bounded analytically by
+    :func:`repro.reliability.sense_false_positive_bound` (and driven to
+    ~zero by k-pass voting + selective hit verification; the
+    ``reliability_sweep`` benchmark measures both against these bounds).
+    """
     if plan.exact:
         return 0.0
     ub_bits = max(int(hi - 1).bit_length(), 0)

@@ -61,6 +61,8 @@ class ChipBurst:
     bus_match_bytes: int = 0    # match-mode channel payload (bitmaps/chunks)
     bus_storage_bytes: int = 0  # storage-mode payload (dirty-plane restage)
     pcie_bytes: int = 0         # host-link payload
+    retry_senses: int = 0       # extra senses from §IV-C2 read retries
+    fallback_reads: int = 0     # full-page storage-mode reads (ECC fallback)
 
 
 class BurstTimeline:
@@ -134,6 +136,15 @@ class BurstTimeline:
             t = start
             if b.bus_storage_bytes:
                 t = sim._bus(die, t, b.bus_storage_bytes, match_mode=False)
+            # Reliability tier: a read-retried open re-senses the page; an
+            # ECC fallback decode additionally moves the WHOLE page over
+            # the channel bus in storage mode (the §IV-C "give up and read
+            # it out" path) before match mode resumes.
+            for _ in range(b.retry_senses + b.fallback_reads):
+                t = sim._sense(die, t)
+            if b.fallback_reads:
+                t = sim._bus(die, t, b.fallback_reads * PAGE_BYTES,
+                             match_mode=False)
             for _ in range(b.senses):
                 t = sim._sense(die, t)
             if b.matches:

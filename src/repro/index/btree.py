@@ -36,6 +36,7 @@ from repro.core.bits import (SLOTS_PER_CHUNK, chunk_bitmap_from_slot_bitmap,
 from repro.core.commands import Command
 from repro.core.page import mask_header_slots
 from repro.core.range_query import evaluate_plan_on_pages, exact_range
+from repro.reliability import require_clean
 
 FULL_MASK = 0xFFFFFFFFFFFFFFFF
 LEAF_CAPACITY = 504
@@ -128,7 +129,7 @@ class SimBTree:
             if t is None:
                 out.append(None)
                 continue
-            resp = t.result()
+            resp = require_clean(t.result())
             if resp.value_slot is None:
                 out.append(None)
                 continue
@@ -170,7 +171,7 @@ class SimBTree:
 
         out: list[tuple[int, int]] = []
         for _leaf, slots, gk, gv in hits:
-            rk, rv = gk.result(), gv.result()
+            rk, rv = require_clean(gk.result()), require_clean(gv.result())
             self.stats.chunk_bytes += 64 * (len(rk.chunk_ids)
                                             + len(rv.chunk_ids))
             chunk_pos = {int(c): j for j, c in enumerate(rk.chunk_ids)}

@@ -39,6 +39,7 @@ from repro.core.bits import (SLOTS_PER_CHUNK, chunk_bitmap_from_slot_bitmap,
                              pair_to_u64, unpack_bitmap)
 from repro.core.commands import Command
 from repro.core.page import USER_SLOTS, mask_header_slots
+from repro.reliability import require_clean
 
 FULL_MASK = 0xFFFFFFFFFFFFFFFF
 BUCKET_CAPACITY = 404
@@ -193,7 +194,8 @@ class SimHashIndex:
         # Demonstrate the command sequence on-device: search key page with a
         # mask selecting nothing of the key (mask=0 matches all), then use
         # host-computed partition bitmaps to gather each side's chunks.
-        resp = self.backend.search(Command.search(b.key_page, 0, 0))
+        resp = require_clean(self.backend.search(
+            Command.search(b.key_page, 0, 0)))
         self.split_searches += 1
         bitmap = mask_header_slots(resp.bitmap_words)
         cb = int(pair_to_u64(*chunk_bitmap_from_slot_bitmap(bitmap)))
@@ -237,7 +239,7 @@ class SimHashIndex:
         slots_out: list[int | None] = []
         gathers = []
         for b, t in zip(buckets, tickets):
-            bitmap = mask_header_slots(t.result().bitmap_words)
+            bitmap = mask_header_slots(require_clean(t.result()).bitmap_words)
             slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
             if slots.size == 0:
                 slots_out.append(None)
@@ -257,5 +259,6 @@ class SimHashIndex:
                 continue
             off = (value_slot % SLOTS_PER_CHUNK) * 8
             out.append(int.from_bytes(
-                bytes(g.result().chunks[0][off:off + 8]), "little"))
+                bytes(require_clean(g.result()).chunks[0][off:off + 8]),
+                "little"))
         return out

@@ -27,6 +27,7 @@ from repro.core.bitweaving import RowCodec
 from repro.core.commands import Command
 from repro.core.page import mask_header_slots
 from repro.core.range_query import RangePlan, evaluate_plan_on_pages
+from repro.reliability import require_clean
 
 ROWS_PER_PAGE = 504
 
@@ -84,7 +85,7 @@ class SimSecondaryIndex:
 
         rows = []
         for slots, ticket in pending:
-            g = ticket.result()
+            g = require_clean(ticket.result())
             self.io_chunk_bytes += 64 * len(g.chunk_ids)
             chunk_pos = {int(c): j for j, c in enumerate(g.chunk_ids)}
             out = np.zeros(slots.size, dtype=np.uint64)

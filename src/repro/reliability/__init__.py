@@ -1,0 +1,20 @@
+"""Reliability tier: deterministic fault injection and ECC-aware matching.
+
+``FaultModel`` (faults.py) corrupts stored pages and match-mode senses under
+one seed; ``ReliabilityState`` (policy.py) threads the §IV-C2/C3 optimistic
+open / voting / selective-verification pipeline through every backend's
+flush, surfacing outer-code failures as typed per-ticket
+``UncorrectableReadError``s.  See README "Reliability tier".
+"""
+from .faults import (DAY_NS, FaultModel, majority_flip_prob,
+                     sense_false_negative_bound, sense_false_positive_bound)
+from .policy import (PageOpen, ReliabilityPolicy, ReliabilityState,
+                     ReliabilityStats, UncorrectableReadError, match_bitmap,
+                     plan_bitmap, require_clean)
+
+__all__ = [
+    "DAY_NS", "FaultModel", "majority_flip_prob",
+    "sense_false_negative_bound", "sense_false_positive_bound",
+    "PageOpen", "ReliabilityPolicy", "ReliabilityState", "ReliabilityStats",
+    "UncorrectableReadError", "match_bitmap", "plan_bitmap", "require_clean",
+]

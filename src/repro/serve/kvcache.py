@@ -32,6 +32,7 @@ from repro.core.commands import Command
 from repro.core.engine import SimChipArray
 from repro.core.page import USER_SLOTS, mask_header_slots
 from repro.models.config import ModelConfig
+from repro.reliability import require_clean
 
 TABLE_CODEC = RowCodec([Column("seq", 24), Column("block", 20),
                         Column("phys", 20)])
@@ -102,7 +103,8 @@ class SimPagedKVCache:
         query = mq_seq.query | mq_blk.query
         mask = mq_seq.mask | mq_blk.mask          # phys field = don't care
         page = self._table_page_of(seq_id)
-        resp = self.chips.search(Command.search(page, query, mask))
+        resp = require_clean(self.chips.search(Command.search(page, query,
+                                                              mask)))
         self.stats.searches += 1
         bitmap = mask_header_slots(resp.bitmap_words)
         slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
@@ -117,7 +119,8 @@ class SimPagedKVCache:
         entry of the sequence, freed in one sweep."""
         mq = TABLE_CODEC.equals("seq", seq_id)
         page = self._table_page_of(seq_id)
-        resp = self.chips.search(Command.search(page, mq.query, mq.mask))
+        resp = require_clean(self.chips.search(Command.search(page, mq.query,
+                                                              mq.mask)))
         self.stats.searches += 1
         bitmap = mask_header_slots(resp.bitmap_words)
         slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]

@@ -45,6 +45,7 @@ from repro.core.page import mask_header_slots
 from repro.core.range_query import evaluate_plan_on_pages, exact_range
 from repro.flash.params import FlashParams
 from repro.flash.ssd import SSDSim
+from repro.reliability import UncorrectableReadError, require_clean
 from .ycsb import KEYS_PER_PAGE, Workload, value_page_of
 
 WARMUP_FRACTION = 0.30
@@ -102,12 +103,22 @@ class FunctionalRunResult:
     write_latencies_ns: np.ndarray | None = None   # one entry per program
     sim_makespan_ns: float = 0.0
     sim_energy_pj: float = 0.0
+    # Reliability tier (run with ``reliability=ReliabilityState(...)``):
+    # per-op error outcomes.  A read/scan whose page fails outer-code
+    # decode surfaces here as a typed per-op error — never as a silently
+    # wrong value — and pages the open burst marked stale are refreshed
+    # (rewritten through the deferred-program path) at end of replay.
+    read_errors: np.ndarray | None = None   # (N,) bool: UncorrectableReadError
+    n_read_errors: int = 0
+    refreshes: int = 0                      # stale pages rewritten at drain
+    reliability_stats: object | None = None  # ReliabilityStats snapshot
 
 
 def run_functional(workload: Workload, backend, *, burst: int = 64,
                    fused: bool = False,
                    write_buffer: "WriteBuffer | bool" = False,
-                   write_high_water: int = 16) -> FunctionalRunResult:
+                   write_high_water: int = 16,
+                   reliability=None) -> FunctionalRunResult:
     """Execute the op stream against real pages through a MatchBackend.
 
     Key id ``k`` lives on key page ``k // 504`` at entry ``k % 504`` with
@@ -143,6 +154,14 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
     page the scanned range touches: the §V-C exact-range decomposition
     evaluates fused in-latch and 64 B per page crosses back, regardless
     of the plan's pass count.
+    With ``reliability=ReliabilityState(...)`` the replay runs against
+    fault-injected pages: the state installs on the backend after the
+    bulk load (so the fault model corrupts the loaded images), every op's
+    result passes through :func:`repro.reliability.require_clean`, pages
+    that fail outer-code decode mark ``read_errors[qi]`` instead of
+    returning a wrong value, and pages flagged CLEAN_NEEDS_REFRESH are
+    rewritten (fresh timestamp, errors cleared) through the deferred
+    Op.PROGRAM path at end of replay (``refreshes``).
     """
     if workload.keys is None:
         raise ValueError("workload has no key stream "
@@ -160,6 +179,11 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         backend.program_entries(value_page_of(p, n_key_pages),
                                 values[s:s + KEYS_PER_PAGE])
 
+    # Fault injection corrupts the images loaded above (install also
+    # switches every later flush onto the reliability path).
+    if reliability is not None:
+        reliability.install(backend)
+
     # Timeline-coupled backends (sharded + BurstTimeline) measure the
     # replayed op stream only — the bulk load above is setup, not workload.
     timeline = getattr(backend, "timeline", None)
@@ -173,6 +197,7 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
     n = len(workload.ops)
     out = np.zeros(n, dtype=np.uint64)
     hits = np.zeros(n, dtype=bool)
+    read_errors = np.zeros(n, dtype=bool)
     scan_counts = np.zeros(n, dtype=np.int64)
     flushes = 0
     n_scans = 0
@@ -181,7 +206,11 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
 
     def drain(lookups) -> None:
         for qi, t in lookups:
-            r = t.result()
+            try:
+                r = require_clean(t.result())
+            except UncorrectableReadError:
+                read_errors[qi] = True
+                continue
             if r.value_slot is None:
                 continue
             out[qi] = int.from_bytes(r.value, "little")
@@ -230,7 +259,12 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         flushes += 1
         gathers = []
         for qi, t in searches:
-            bitmap = mask_header_slots(t.result().bitmap_words)
+            try:
+                bitmap = mask_header_slots(
+                    require_clean(t.result()).bitmap_words)
+            except UncorrectableReadError:
+                read_errors[qi] = True
+                continue
             slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
             if slots.size == 0:
                 continue
@@ -242,8 +276,13 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         flushes += 1
         for qi, value_slot, g in gathers:
             off = (value_slot % SLOTS_PER_CHUNK) * 8
-            out[qi] = int.from_bytes(
-                bytes(g.result().chunks[0][off:off + 8]), "little")
+            try:
+                r = require_clean(g.result())
+            except UncorrectableReadError:
+                read_errors[qi] = True
+                continue
+            out[qi] = int.from_bytes(bytes(r.chunks[0][off:off + 8]),
+                                     "little")
             hits[qi] = True
 
     resolve_burst = resolve_burst_fused if fused else resolve_burst_split
@@ -268,9 +307,17 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
             return
         p0 = (lo - 1) // KEYS_PER_PAGE     # page of stored key lo
         p1 = (hi - 2) // KEYS_PER_PAGE     # page of stored key hi - 1
-        bitmaps = evaluate_plan_on_pages(
-            backend, exact_range(lo, hi, width=64),
-            list(range(p0, min(p1, n_key_pages - 1) + 1)))
+        try:
+            bitmaps = evaluate_plan_on_pages(
+                backend, exact_range(lo, hi, width=64),
+                list(range(p0, min(p1, n_key_pages - 1) + 1)))
+        except UncorrectableReadError:
+            # Any touched page failing outer-code decode voids the whole
+            # scan — a partial count would be a silently wrong result.
+            read_errors[qi] = True
+            flushes += 1
+            n_scans += 1
+            return
         flushes += 1
         total = 0
         for bm in bitmaps:
@@ -312,18 +359,32 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
                        values[s:s + KEYS_PER_PAGE])
                 if wb.should_flush:
                     resolve_burst()     # queued reads precede the programs
+                    if reliability is not None:
+                        drain_inflight()
                     programs += wb.flush(backend)
                     write_flushes += 1
             else:
                 resolve_burst()             # read-your-writes ordering
+                if reliability is not None:
+                    # The reliability finalize verifies hits against the
+                    # on-flash image at RESOLVE time (selective
+                    # verification is a re-read, not a kernel output), so
+                    # the image must not change under an in-flight burst:
+                    # drain the depth-1 pipeline before reprogramming.
+                    drain_inflight()
                 backend.program_entries(value_page_of(p, n_key_pages),
                                         values[s:s + KEYS_PER_PAGE])
                 programs += 1
     resolve_burst()
     if wb is not None and wb.n_dirty:
+        if reliability is not None:
+            drain_inflight()    # resolve-time verification, see write path
         programs += wb.flush(backend)
         write_flushes += 1
     drain_inflight()
+    refreshes = 0
+    if reliability is not None:
+        refreshes = _drain_refreshes(backend, reliability)
     result = FunctionalRunResult(
         read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
         flushes=flushes,
@@ -332,13 +393,53 @@ def run_functional(workload: Workload, backend, *, burst: int = 64,
         result_bytes=backend.stats.result_bytes,
         programs=programs, write_flushes=write_flushes,
         buffer_read_hits=wb.stats.read_hits if wb is not None else 0,
-        scan_counts=scan_counts if n_scans else None, n_scans=n_scans)
+        scan_counts=scan_counts if n_scans else None, n_scans=n_scans,
+        read_errors=read_errors if reliability is not None else None,
+        n_read_errors=int(read_errors.sum()), refreshes=refreshes,
+        reliability_stats=reliability.stats if reliability is not None
+        else None)
     if timeline is not None:
         result.burst_latencies_ns = np.asarray(timeline.burst_latencies)
         result.write_latencies_ns = np.asarray(timeline.write_latencies)
         result.sim_makespan_ns = timeline.now
         result.sim_energy_pj = timeline.energy_pj
     return result
+
+
+def _drain_refreshes(backend, reliability) -> int:
+    """Rewrite every page the open bursts flagged CLEAN_NEEDS_REFRESH.
+
+    A refresh is read-through-ECC then reprogram: sub-threshold raw errors
+    are corrected (the simulator's ``_repair`` restores the clean image),
+    the entries are re-extracted and ride the deferred ``Op.PROGRAM`` path
+    with a fresh timestamp — so the rewrite groups and coalesces exactly
+    like workload writes and later opens see a young, error-free page.
+    Pages whose raw error count exceeds the outer-code budget cannot be
+    refreshed (the data is gone); they stay marked and keep surfacing as
+    typed errors.
+    """
+    from repro.core.page import entries_from_plain
+    chips = backend.chips
+    tickets = []
+    for addr in sorted(reliability.refresh_due):
+        chip, local = chips.route(addr)
+        sp = chip.pages.get(local)
+        if sp is None:
+            continue
+        if sp.injected_error_bits > reliability.policy.ecc.t_correctable:
+            continue                       # beyond refresh: uncorrectable
+        if sp.injected_error_bits:
+            reliability.stats.corrected_bits += sp.injected_error_bits
+            chip._repair(sp, local)
+        plain = chip._derandomize_page(sp, local)
+        entries = entries_from_plain(plain, sp.n_entries)
+        tickets.append(backend.submit_program(
+            addr, entries, timestamp_ns=reliability.now_ns))
+    if tickets:
+        backend.flush()
+    reliability.refresh_due.clear()
+    reliability.stats.refreshes += len(tickets)
+    return len(tickets)
 
 
 def run(workload: Workload, *, params: FlashParams, system: str,

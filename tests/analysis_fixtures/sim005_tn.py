@@ -1,0 +1,33 @@
+# analysis: pretend-path=src/repro/index/fixture_consumer_ok.py
+"""SIM005 true negatives: every consumption acknowledges the channel, and
+the exempt layers (backend/, reliability/, ...) are out of scope anyway."""
+import numpy as np
+
+from repro.reliability import UncorrectableReadError, require_clean
+
+
+def wrapped_consumer(backend, cmd):
+    resp = require_clean(backend.search(cmd))
+    return np.nonzero(resp.bitmap_words)[0]
+
+
+def verdict_inspector(tickets):
+    out = []
+    for t in tickets:
+        r = t.result()
+        if r.open_verdict != "clean":
+            continue
+        out.append(r.match_count)
+    return out
+
+
+def error_handler(ticket):
+    try:
+        return ticket.result().value_slot
+    except UncorrectableReadError:
+        return None
+
+
+def no_consumption(backend, cmd):
+    # builds a response-shaped thing but never loads a result attribute
+    return backend.search(cmd)

@@ -1,0 +1,19 @@
+# analysis: pretend-path=src/repro/index/fixture_consumer.py
+"""SIM005 true positives: match results consumed with the error channel
+ignored — an uncorrectable page's all-zero bitmap reads as a miss."""
+import numpy as np
+
+
+def silent_bitmap_consumer(backend, cmd):
+    resp = backend.search(cmd)
+    return np.nonzero(resp.bitmap_words)[0]     # no verdict check anywhere
+
+
+def silent_count_and_slot(tickets):
+    total = 0
+    slots = []
+    for t in tickets:
+        r = t.result()
+        total += r.match_count                  # error channel ignored
+        slots.append(r.value_slot)
+    return total, slots

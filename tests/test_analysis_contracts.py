@@ -71,6 +71,33 @@ def test_sim004_true_negatives():
     assert lint_fixture("sim004_tn.py", "SIM004") == []
 
 
+def test_sim005_true_positives():
+    found = lint_fixture("sim005_tp.py", "SIM005")
+    assert {"consumes:bitmap_words", "consumes:match_count",
+            "consumes:value_slot"} <= slugs(found)
+    assert {"silent_bitmap_consumer", "silent_count_and_slot"} \
+        <= {f.symbol for f in found}
+
+
+def test_sim005_true_negatives():
+    assert lint_fixture("sim005_tn.py", "SIM005") == []
+
+
+def test_sim005_exempt_layers():
+    """The same silent consumption inside backend/ is the plumbing that
+    PRODUCES responses — out of scope by path."""
+    import shutil
+    import tempfile
+    src = (FIXTURES / "sim005_tp.py").read_text().splitlines()
+    src[0] = "# analysis: pretend-path=src/repro/backend/fixture.py"
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "sim005_backend.py"
+        p.write_text("\n".join(src))
+        found = run_contracts(ROOT, paths=[p],
+                              rules=[RULES_BY_ID["SIM005"]])
+    assert found == []
+
+
 def test_pragma_rehomes_fixture():
     mod = parse_module(FIXTURES / "sim002_tp.py", ROOT)
     assert mod.rel_path == "src/repro/core/engine.py"

@@ -123,7 +123,13 @@ def test_optimistic_open_fallback_and_uncorrectable():
     res = ecc.optimistic_open(bad, now_ns=0, injected_error_bits=5, cfg=cfg)
     assert res.verdict is OpenVerdict.FALLBACK_ECC
     assert res.bits_corrected == 5
-    res2 = ecc.optimistic_open(bad, now_ns=0, injected_error_bits=50, cfg=cfg)
+    # The read-retry path draws from the owning chip's generator; passing
+    # none is a configuration bug and must fail loudly, not silently fall
+    # back to a shared default stream.
+    with pytest.raises(ValueError, match="seeded generator"):
+        ecc.optimistic_open(bad, now_ns=0, injected_error_bits=50, cfg=cfg)
+    res2 = ecc.optimistic_open(bad, now_ns=0, injected_error_bits=50, cfg=cfg,
+                               rng=np.random.default_rng(0))
     assert res2.verdict is OpenVerdict.UNCORRECTABLE
     assert res2.retries_used == 3
 

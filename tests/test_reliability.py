@@ -1,0 +1,271 @@
+"""Reliability tier: seeded faults, ECC-aware matching, error-path parity.
+
+Covers the §IV-C pipeline end to end: the vectorized CRC kernels against
+their per-byte oracles, `FaultModel` determinism, the typed
+`UncorrectableReadError` channel behaving identically on the scalar,
+batched and sharded backends (below-t, above-t, header-only and body-only
+corruption), reprogram clearing injected damage, retention refreshes, and
+the two sweep-level contracts in miniature: a verified replay produces
+zero wrong results against the analytic oracle, an unverified noisy
+replay produces a nonzero wrong-op rate that voting shrinks and the
+analytic sense bounds cap.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.backend import make_backend
+from repro.core.commands import Command
+from repro.core.ecc import (_crc32_bytewise, _crc64_bytewise,
+                            build_header_chunk, crc32, crc32_rows, crc64,
+                            crc64_rows, parse_header_chunk,
+                            parse_header_chunks)
+from repro.core.ecc import EccConfig
+from repro.core.engine import SimChipArray
+from repro.reliability import (FaultModel, ReliabilityPolicy,
+                               ReliabilityState, UncorrectableReadError,
+                               majority_flip_prob,
+                               sense_false_negative_bound,
+                               sense_false_positive_bound)
+from repro.workload.runner import run_functional
+from repro.workload.ycsb import generate
+
+BACKENDS = ("scalar", "batched", "sharded")
+T_CORRECTABLE = 40
+
+
+# ------------------------------------------------------------- CRC kernels
+def test_crc_fold_matches_bytewise():
+    rng = np.random.default_rng(0)
+    # Lengths straddling the row size, incl. ragged tails and the
+    # below-2-rows bytewise short-circuit.
+    for n in (0, 1, 63, 64, 65, 500, 4096, 4097):
+        buf = rng.integers(0, 256, n, dtype=np.uint64).astype(np.uint8)
+        assert crc64(buf) == _crc64_bytewise(buf), n
+        assert crc32(buf) == _crc32_bytewise(buf), n
+
+
+def test_crc_rows_batch_matches_loop():
+    rng = np.random.default_rng(1)
+    rows = rng.integers(0, 256, (9, 173), dtype=np.uint64).astype(np.uint8)
+    np.testing.assert_array_equal(
+        crc64_rows(rows),
+        np.array([_crc64_bytewise(r) for r in rows], dtype=np.uint64))
+    np.testing.assert_array_equal(
+        crc32_rows(rows),
+        np.array([_crc32_bytewise(r) for r in rows], dtype=np.uint32))
+
+
+def test_parse_header_chunks_batch_matches_scalar():
+    chunks = np.stack([build_header_chunk(ts * 1000 + 7)
+                       for ts in range(6)])
+    chunks[3, 10] ^= 0xFF                        # corrupt one body byte
+    batch = parse_header_chunks(chunks)
+    for i, h in enumerate(batch):
+        ref = parse_header_chunk(chunks[i])
+        assert (h.crc, h.magic, h.timestamp_ns, h.crc_ok, h.magic_ok) == \
+            (ref.crc, ref.magic, ref.timestamp_ns, ref.crc_ok, ref.magic_ok)
+    assert [h.crc_ok for h in batch] == [True] * 3 + [False] + [True] * 2
+
+
+# -------------------------------------------------------------- FaultModel
+def test_fault_model_deterministic_and_monotonic():
+    fm = FaultModel(seed=5, base_ber=1e-3, retention_days=45.0)
+    draws = [fm.error_bits_for(123, 7) for _ in range(3)]
+    assert draws[0] == draws[1] == draws[2]
+    assert FaultModel(seed=6, base_ber=1e-3, retention_days=45.0
+                      ).error_bits_for(123, 7) != draws[0] or \
+        FaultModel(seed=6, base_ber=1e-3, retention_days=45.0
+                   ).error_bits_for(123, 8) != fm.error_bits_for(123, 8)
+    assert fm.raw_ber() > FaultModel(seed=5, base_ber=1e-3).raw_ber()
+    assert FaultModel(seed=5, base_ber=1e-3, pe_cycles=6000).raw_ber() \
+        > FaultModel(seed=5, base_ber=1e-3).raw_ber()
+
+
+def test_fault_injection_reproducible_across_arrays():
+    imgs = []
+    for _ in range(2):
+        arr = SimChipArray(n_chips=2, pages_per_chip=4, device_seed=3)
+        for p in range(4):
+            arr.program_entries(p, np.arange(1, 101, dtype=np.uint64))
+        FaultModel(seed=9, base_ber=2e-4, retention_days=30.0).inject(arr)
+        imgs.append([c.pages[a].raw.copy() for c in arr.chips
+                     for a in sorted(c.pages)])
+    for a, b in zip(*imgs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_analytic_sense_bounds():
+    assert majority_flip_prob(1e-3, 1) == pytest.approx(1e-3)
+    assert majority_flip_prob(1e-3, 3) < 1e-3
+    b1 = sense_false_positive_bound(1e-3, 1)
+    b3 = sense_false_positive_bound(1e-3, 3)
+    assert 0.0 < b3 < b1 < 1.0
+    assert sense_false_negative_bound(1e-3, 3) < \
+        sense_false_negative_bound(1e-3, 1)
+
+
+# ------------------------------------------- typed error channel / parity
+def _reliable_backend(name: str, corrupt):
+    """Identically-programmed backend with targeted corruption and a
+    (noise-free) reliability tier attached."""
+    arr = SimChipArray(n_chips=2, pages_per_chip=6, device_seed=3)
+    keys = {p: np.arange(p * 100 + 1, p * 100 + 81, dtype=np.uint64)
+            for p in range(6)}
+    for p, k in keys.items():
+        arr.program_entries(p, k)
+    corrupt(arr)
+    kw = {"use_kernel": False} if name == "sharded" else {}
+    backend = make_backend(name, arr, **kw)
+    # retry_fix_prob=0 pins the read-retry loop: a page that is above the
+    # outer-code budget AND fails its header CRC deterministically exhausts
+    # retries and surfaces UNCORRECTABLE on every backend.
+    rel = ReliabilityState(ReliabilityPolicy(
+        vote_k=1, ecc=EccConfig(retry_fix_prob=0.0)))
+    rel.install(backend)
+    return backend, rel, keys
+
+
+def _outcome(fn):
+    try:
+        resp = fn()
+    except UncorrectableReadError as e:
+        return ("uncorrectable", e.page_addr)
+    return ("ok", np.asarray(resp.bitmap_words).tolist())
+
+
+@pytest.mark.parametrize("region,n_bits", [
+    ((64, 4096), 8),                  # body-only, below t: correctable
+    ((0, 64), 12),                    # header chunk: open must fall back
+    ((0, 64), T_CORRECTABLE + 30),    # header dead + above t: typed error
+])
+def test_error_path_parity_across_backends(region, n_bits):
+    def corrupt(arr):
+        arr.chips[0].inject_bit_errors(
+            0, n_bits, rng=np.random.default_rng(4), byte_region=region)
+
+    outs = {}
+    for name in BACKENDS:
+        backend, rel, keys = _reliable_backend(name, corrupt)
+        per_cmd = []
+        for p in range(6):
+            per_cmd.append(_outcome(
+                lambda p=p: backend.search(
+                    Command.search(p, int(keys[p][3])))))
+        outs[name] = (per_cmd, rel.stats)
+    ref_cmds, ref_stats = outs["scalar"]
+    # Damage confined to page 0 of chip 0 (= global page 0): every other
+    # page must still resolve to its planted single-hit bitmap.
+    for verdict, _ in ref_cmds[1:]:
+        assert verdict == "ok"
+    if n_bits > T_CORRECTABLE:
+        assert ref_cmds[0] == ("uncorrectable", 0)
+    else:
+        assert ref_cmds[0][0] == "ok"
+    for name in BACKENDS[1:]:
+        cmds, stats = outs[name]
+        assert cmds == ref_cmds, name
+        assert stats == ref_stats, name
+
+
+def test_reprogram_clears_injected_errors():
+    def corrupt(arr):
+        arr.chips[0].inject_bit_errors(
+            0, T_CORRECTABLE + 25, rng=np.random.default_rng(4),
+            byte_region=(0, 64))
+
+    backend, _, keys = _reliable_backend("scalar", corrupt)
+    with pytest.raises(UncorrectableReadError):
+        backend.search(Command.search(0, int(keys[0][0])))
+    backend.submit_program(0, keys[0])
+    backend.flush()
+    assert backend.chips.chips[0].pages[0].injected_error_bits == 0
+    resp = backend.search(Command.search(0, int(keys[0][0])))
+    assert np.unpackbits(
+        np.asarray(resp.bitmap_words, dtype=np.uint32).view(np.uint8)
+    ).sum() == 1
+
+
+# ----------------------------------------------------- functional replays
+def _functional(name, wl, policy, fault, **kw):
+    arr = SimChipArray(
+        n_chips=2, pages_per_chip=max(wl.n_index_pages // 2 + 1, 8),
+        device_seed=3)
+    bkw = {"use_kernel": False} if name == "sharded" else {}
+    rel = ReliabilityState(policy, fault)
+    res = run_functional(wl, make_backend(name, arr, **bkw), burst=16,
+                         reliability=rel, **kw)
+    return res, rel
+
+
+def _oracle(wl):
+    return (wl.keys.astype(np.uint64) + np.uint64(1)) \
+        * np.uint64(0x9E3779B97F4A7C15) | np.uint64(1)
+
+
+def test_verified_replay_zero_wrong_results_and_refreshes():
+    wl = generate(48, n_key_pages=4, read_ratio=1.0, alpha=0.8, seed=2)
+    oracle = _oracle(wl)
+    policy = ReliabilityPolicy(verify_hits=True, fallback_on_miss=True,
+                               vote_k=3)
+    fault = FaultModel(seed=11, base_ber=1e-4, retention_days=45.0,
+                       sense_ber=2e-4)
+    runs = {n: _functional(n, wl, policy, fault, fused=True)
+            for n in BACKENDS}
+    ref, ref_rel = runs["scalar"]
+    ok = ref.read_hits & (ref.read_values == oracle)
+    assert np.all(ok | ref.read_errors), "silent wrong result escaped"
+    # age 45 > the 30-day refresh margin: stale pages must be rewritten
+    assert ref.refreshes > 0 and ref.refreshes == ref_rel.stats.refreshes
+    # Per-op outcomes are the cross-backend contract; the stats snapshot is
+    # not (the kernel backends' depth-1 lazy pipeline legitimately shifts
+    # which resolve observes an already-repaired page, moving a few
+    # verify/fallback counts — the sweep gates outcomes, not stats).
+    for name in BACKENDS[1:]:
+        r, _ = runs[name]
+        np.testing.assert_array_equal(r.read_values, ref.read_values)
+        np.testing.assert_array_equal(r.read_hits, ref.read_hits)
+        np.testing.assert_array_equal(r.read_errors, ref.read_errors)
+
+
+def test_unverified_noise_measured_within_bounds():
+    wl = generate(64, n_key_pages=4, read_ratio=1.0, alpha=0.8, seed=3)
+    oracle = _oracle(wl)
+    n = len(wl.ops)
+    rates = {}
+    for vote_k in (1, 3):
+        policy = ReliabilityPolicy(verify_hits=False,
+                                   fallback_on_miss=False, vote_k=vote_k)
+        fault = FaultModel(seed=11, base_ber=0.0, sense_ber=1e-3)
+        res, _ = _functional("scalar", wl, policy, fault, fused=True)
+        wrong = int(np.sum(~(res.read_hits
+                             & (res.read_values == oracle))))
+        rates[vote_k] = wrong / n
+        bound = sense_false_positive_bound(1e-3, vote_k) \
+            + sense_false_negative_bound(1e-3, vote_k)
+        slack = 3.0 * math.sqrt(bound * (1.0 - bound) / n)
+        assert rates[vote_k] <= bound + slack, vote_k
+    assert rates[1] > 0.0, "noise path not exercised"
+    assert rates[3] <= rates[1], "voting must not increase the error rate"
+
+
+def test_write_buffer_replay_parity_under_faults():
+    wl = generate(48, n_key_pages=4, read_ratio=0.75, alpha=0.8, seed=4)
+    policy = ReliabilityPolicy(verify_hits=True, fallback_on_miss=True,
+                               vote_k=3)
+    fault = FaultModel(seed=11, base_ber=1e-4, retention_days=45.0,
+                       sense_ber=2e-4)
+    runs = {}
+    for name in ("scalar", "batched"):
+        for buffered in (False, True):
+            res, _ = _functional(name, wl, policy, fault, fused=True,
+                                 write_buffer=buffered)
+            runs[name, buffered] = res
+    ref = runs["scalar", False]
+    for (name, buffered), r in runs.items():
+        np.testing.assert_array_equal(r.read_values, ref.read_values,
+                                      err_msg=f"{name} buffered={buffered}")
+        np.testing.assert_array_equal(r.read_hits, ref.read_hits)
+        np.testing.assert_array_equal(r.read_errors, ref.read_errors)
+    assert runs["batched", True].programs <= runs["batched", False].programs
