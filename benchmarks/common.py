@@ -5,8 +5,11 @@ import json
 import os
 import time
 
+from repro.backend import make_backend
+from repro.core.engine import SimChipArray
 from repro.flash.params import DEFAULT_PARAMS
-from repro.workload.runner import RunResult, run
+from repro.frontend import RunConfig, RunReport, replay
+from repro.workload.runner import run
 from repro.workload.ycsb import generate
 
 # Paper grids (§VI-A4/A5, §VII)
@@ -19,10 +22,18 @@ DISTRIBUTIONS = (("uniform", 0.0), ("skewed", 0.5), ("very_skewed", 0.9))
 N_QUERIES = 4000
 N_KEY_PAGES = 1024
 
+# Event-frontend scale: the functional executor programs real pages, so
+# the keyspace is smaller than the closed-form grid's (which never
+# materializes data).  Geometry mirrors the paper's 8-channel device.
+EVENT_N_QUERIES = 1200
+EVENT_N_KEY_PAGES = 32
+EVENT_N_CHIPS = 8
+
 
 def run_pair(read_ratio: float, alpha: float, coverage: float, *,
              n_queries: int = N_QUERIES, seed: int = 1,
-             **kw) -> tuple[RunResult, RunResult]:
+             **kw) -> tuple[RunReport, RunReport]:
+    """Closed-form analytic baseline-vs-SiM pair (the reference series)."""
     wl = generate(n_queries, n_key_pages=N_KEY_PAGES, read_ratio=read_ratio,
                   alpha=alpha, seed=seed)
     base = run(wl, params=DEFAULT_PARAMS, system="baseline",
@@ -31,6 +42,29 @@ def run_pair(read_ratio: float, alpha: float, coverage: float, *,
     sim = run(wl, params=DEFAULT_PARAMS, system="sim",
               cache_coverage=coverage, **kw)
     return base, sim
+
+
+def run_event(read_ratio: float, alpha: float, *,
+              n_queries: int = EVENT_N_QUERIES, seed: int = 1,
+              qps: float = 3e5, scheduler: str = "read_priority",
+              concurrency: int = 8, write_high_water: int = 16,
+              **kw) -> RunReport:
+    """Measured event-frontend run: the op stream replayed against real
+    programmed pages under Poisson arrivals, NCQ admission and the given
+    scheduler — per-request latency distributions rather than the
+    closed-form model's per-op service times."""
+    wl = generate(n_queries, n_key_pages=EVENT_N_KEY_PAGES,
+                  read_ratio=read_ratio, alpha=alpha, seed=seed)
+    arr = SimChipArray(
+        n_chips=EVENT_N_CHIPS,
+        pages_per_chip=max(wl.n_index_pages // EVENT_N_CHIPS + 1, 8),
+        device_seed=7)
+    cfg = RunConfig.open_loop(qps, concurrency=concurrency,
+                              scheduler=scheduler, burst=64,
+                              write_buffer=True,
+                              write_high_water=write_high_water,
+                              seed=seed, **kw)
+    return replay(wl, make_backend("scalar", arr), cfg)
 
 
 class Timer:

@@ -1,12 +1,40 @@
 """Paper Fig 15: p99 tail read latency reduction (incl. the §VII-D corner
-case where SiM's all-dirty write buffer causes sporadic write-back storms)."""
+case where SiM's all-dirty write buffer causes sporadic write-back storms).
+
+Two series per (distribution, read-ratio) cell:
+
+  * ``fig15_event_*`` — MEASURED: event-frontend per-request p99 under
+    FIFO vs read-priority NCQ scheduling.  The tail claim becomes
+    directly observable: FIFO reads queue behind the deferred die-program
+    backlog, read-priority reads program-suspend past it;
+  * ``fig15_ref_*`` — the closed-form analytic baseline-vs-SiM grid,
+    kept as the labeled reference series (coverage axis lives here only).
+"""
 from __future__ import annotations
 
 from benchmarks.common import (COVERAGES, DISTRIBUTIONS, READ_RATIOS, Timer,
-                               emit, run_pair)
+                               emit, run_event, run_pair)
 
 
 def main(scale: int = 1) -> None:
+    # Measured series: FIFO-vs-read-priority p99 on the write-heavier
+    # cells, where the program backlog actually builds up.
+    with Timer() as te:
+        for dist_name, alpha in DISTRIBUTIONS:
+            for rr in (0.6, 0.4, 0.2):
+                p99 = {}
+                for sched in ("fifo", "read_priority"):
+                    r = run_event(rr, alpha, n_queries=1200 * scale,
+                                  scheduler=sched)
+                    p99[sched] = r.latency.read_p99_ns
+                gain = p99["fifo"] / p99["read_priority"] \
+                    if p99["read_priority"] else 0.0
+                emit(f"fig15_event_{dist_name}_r{int(rr*100)}",
+                     te.elapsed_us,
+                     f"p99_fifo={p99['fifo']/1e3:.0f}us_rp="
+                     f"{p99['read_priority']/1e3:.0f}us_gain={gain:.1f}x")
+
+    # Reference series: closed-form analytic grid.
     cells = []
     with Timer() as t:
         for dist_name, alpha in DISTRIBUTIONS:
@@ -19,8 +47,8 @@ def main(scale: int = 1) -> None:
                     cells.append((dist_name, rr, cov, red))
     n = len(cells)
     for dist_name, rr, cov, red in cells:
-        emit(f"fig15_{dist_name}_r{int(rr*100)}_c{int(cov*100)}",
-             t.elapsed_us / n, f"p99_reduction={red:.1%}")
+        emit(f"fig15_ref_{dist_name}_r{int(rr*100)}_c{int(cov*100)}",
+             t.elapsed_us / n, f"closed_form_p99_reduction={red:.1%}")
     emit("fig15_max_reduction", t.elapsed_us / n,
          f"max={max(c[3] for c in cells):.0%}(paper_up_to_85%)")
     corner = [c for c in cells if c[1] <= 0.4 and c[0] == "very_skewed"

@@ -21,7 +21,7 @@ from repro.kernels.sim_search.ops import sim_search
 from repro.kernels.sim_gather.ops import sim_gather
 from repro.kernels.sim_fused.ops import sim_fused
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.workload.runner import run_functional
+from repro.frontend import RunConfig, replay
 from repro.workload.ycsb import generate
 
 
@@ -83,7 +83,7 @@ def backend_batch_comparison(n_pages: int = 32,
 
 def functional_burst_comparison(n_queries: int = 384,
                                 n_key_pages: int = 8) -> None:
-    """End-to-end ``run_functional``: scalar vs batched-split vs fused.
+    """End-to-end functional replay: scalar vs batched-split vs fused.
 
     The read-heavy YCSB stream is replayed three ways: per-command scalar
     chips, the batched backend's split path (search launch -> host bitmap
@@ -105,8 +105,8 @@ def functional_burst_comparison(n_queries: int = 384,
     def once(name: str, fused: bool, workload=wl):
         arr = SimChipArray(n_chips=4, pages_per_chip=pages_per_chip,
                            device_seed=3)
-        return run_functional(workload, make_backend(name, arr), burst=64,
-                              fused=fused)
+        return replay(workload, make_backend(name, arr),
+                      RunConfig(burst=64, fused=fused))
 
     results, times = {}, {}
     for label, name, fused in (("scalar", "scalar", False),
@@ -128,7 +128,7 @@ def functional_burst_comparison(n_queries: int = 384,
     speed_b = times["scalar"] / times["batched"]
     speed_f = times["scalar"] / times["fused"]
     assert speed_f >= 2.0, \
-        f"fused run_functional speedup {speed_f:.1f}x < 2x gate"
+        f"fused replay speedup {speed_f:.1f}x < 2x gate"
     emit("functional_scalar", times["scalar"] / n_queries,
          f"q={n_queries}_per_command_reference")
     emit("functional_batched", times["batched"] / n_queries,
@@ -163,9 +163,9 @@ def write_path_comparison(n_queries: int = 384,
     def once(buffered: bool, workload=wl):
         arr = SimChipArray(n_chips=4, pages_per_chip=pages_per_chip,
                            device_seed=3)
-        return run_functional(workload, make_backend("batched", arr),
-                              burst=64, fused=True, write_buffer=buffered,
-                              write_high_water=8)
+        return replay(workload, make_backend("batched", arr),
+                      RunConfig(burst=64, fused=True, write_buffer=buffered,
+                                write_high_water=8))
 
     results, times, staged = {}, {}, {}
     for label, buffered in (("per_write", False), ("buffered", True)):
@@ -397,7 +397,7 @@ def sharded_scaling(n_pages: int = 384, n_q: int = 384) -> None:
 
 def functional_sharded_timeline(n_queries: int = 256,
                                 n_key_pages: int = 8) -> None:
-    """run_functional on a 4x4 sharded backend with timeline coupling:
+    """Functional replay on a 4x4 sharded backend with timeline coupling:
     emits the simulated per-burst latency distribution (fig14/15-style)
     and energy from the *functional* replay."""
     wl = generate(n_queries, n_key_pages=n_key_pages, read_ratio=0.9,
@@ -406,7 +406,7 @@ def functional_sharded_timeline(n_queries: int = 256,
         channels=4, dies_per_channel=4,
         pages_per_chip=max(wl.n_index_pages // 16 + 1, 8),
         device_seed=3, timeline=True)
-    r = run_functional(wl, be, burst=64, fused=True)
+    r = replay(wl, be, RunConfig(burst=64, fused=True))
     assert r.burst_latencies_ns is not None and r.sim_energy_pj > 0
     p = np.percentile(r.burst_latencies_ns, (50, 99))
     emit("sharded_functional_p50_us", p[0] / 1e3,

@@ -38,7 +38,7 @@ from repro.reliability import (FaultModel, ReliabilityPolicy,
                                ReliabilityState,
                                sense_false_negative_bound,
                                sense_false_positive_bound)
-from repro.workload.runner import run_functional
+from repro.frontend import RunConfig, replay
 from repro.workload.ycsb import generate
 
 N_QUERIES = 240
@@ -71,8 +71,8 @@ def _run(wl, backend_name: str, policy: ReliabilityPolicy,
                        device_seed=3)
     kw = {"use_kernel": False} if backend_name == "sharded" else {}
     rel = ReliabilityState(policy, fault)
-    res = run_functional(wl, make_backend(backend_name, arr, **kw),
-                         burst=64, fused=True, reliability=rel)
+    res = replay(wl, make_backend(backend_name, arr, **kw),
+                 RunConfig.reliable(rel, burst=64, fused=True))
     return res, rel
 
 

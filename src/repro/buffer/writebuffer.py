@@ -93,6 +93,18 @@ class WriteBuffer:
     def should_flush(self) -> bool:
         return len(self._dirty) >= self.high_water
 
+    def would_trip(self, page_addr: int) -> bool:
+        """Would ``put(page_addr, ...)`` reach the high-water mark?
+
+        Exact pre-image of ``should_flush`` after the put: a page already
+        dirty coalesces (dirty count unchanged), a clean page adds one.
+        The event frontend uses this to decide whether a buffered write
+        absorbs inline into the burst being composed or ends it (the
+        drain resolves queued reads first, so it is a burst boundary).
+        """
+        return (len(self._dirty)
+                + (int(page_addr) not in self._dirty)) >= self.high_water
+
     # -------------------------------------------------------------- drain
     def flush(self, backend) -> int:
         """Drain every dirty page as ONE deferred program group.

@@ -118,22 +118,34 @@ class BurstTimeline:
         return {int(q): float(np.percentile(lats, q)) for q in qs}
 
     # ------------------------------------------------------------- events
-    def observe_flush(self, bursts: list[ChipBurst]) -> float:
+    def observe_flush(self, bursts: list[ChipBurst], *,
+                      at: float | None = None,
+                      wait_program_lines: bool = False) -> float:
         """Advance the clock across one flush; returns the burst latency.
 
-        All chips start at the flush submit time; each chip's chain is
-        restage -> senses -> matches -> match-mode bus -> PCIe.  Die
-        timelines overlap freely, channel buses serialize chips per
-        channel, the PCIe link serializes everything — queueing falls out
-        of SSDSim's max(ready, resource_free) discipline.
+        All chips start at the flush submit time (``at``, default the
+        adapter clock ``self.now``); each chip's chain is restage ->
+        senses -> matches -> match-mode bus -> PCIe.  Die timelines
+        overlap freely, channel buses serialize chips per channel, the
+        PCIe link serializes everything — queueing falls out of SSDSim's
+        max(ready, resource_free) discipline.
+
+        ``wait_program_lines`` models a FIFO command queue without
+        program suspend: each chip's chain additionally queues behind the
+        die's outstanding program backlog.  The default (False) is the
+        read-priority discipline baked into SSDSim's split sense/program
+        timelines — reads suspend programs and never wait on them.
         """
         if not bursts:
             return 0.0
-        sim, start = self.sim, self.now
+        sim = self.sim
+        start = self.now if at is None else at
         end = start
         for b in bursts:
             die = b.chip % self.params.n_dies
             t = start
+            if wait_program_lines:
+                t = max(t, float(sim.die_prog_free[die]))
             if b.bus_storage_bytes:
                 t = sim._bus(die, t, b.bus_storage_bytes, match_mode=False)
             # Reliability tier: a read-retried open re-senses the page; an
@@ -156,10 +168,11 @@ class BurstTimeline:
             end = max(end, t)
         end += self.params.mmio_ns
         self.burst_latencies.append(end - start)
-        self.now = end
+        self.now = max(self.now, end)
         return end - start
 
-    def observe_program(self, chip: int) -> float:
+    def observe_program(self, chip: int, *,
+                        at: float | None = None) -> float:
         """A page program: PCIe in, program on the die's program timeline.
 
         The channel-bus hop is charged when the dirty plane restages at a
@@ -167,17 +180,20 @@ class BurstTimeline:
         overwrites coalesce, so at most one bus crossing per page per
         write window (see the module docstring for the exact semantics).
         The clock does not advance — SiM's write buffer is asynchronous;
-        backlog surfaces via the die timelines.
+        backlog surfaces via the die timelines.  ``at`` overrides the
+        submit time (the event frontend passes its dispatch timestamp);
+        the return value is the program's completion latency from submit.
         """
         sim = self.sim
-        t = sim._pcie(self.now, PAGE_BYTES)
+        start = self.now if at is None else at
+        t = sim._pcie(start, PAGE_BYTES)
         t = sim._program(chip % self.params.n_dies, t)
-        self.write_latencies.append(t - self.now)
-        return t - self.now
+        self.write_latencies.append(t - start)
+        return t - start
 
     def observe_program_group(self, chips: list[int],
-                              restage_chips: list[int] | None = None
-                              ) -> list[float]:
+                              restage_chips: list[int] | None = None,
+                              *, at: float | None = None) -> list[float]:
         """A deferred write-buffer flush: the whole dirty group at once.
 
         Each page crosses PCIe (serialized on the one link) and queues on
@@ -191,8 +207,9 @@ class BurstTimeline:
         occupancy.  Returns the per-program completion latencies, which
         also append to ``write_latencies``.
         """
-        out = [self.observe_program(c) for c in chips]
+        start = self.now if at is None else at
+        out = [self.observe_program(c, at=at) for c in chips]
         for c in restage_chips or ():
-            self.sim._bus(c % self.params.n_dies, self.now, PAGE_BYTES,
+            self.sim._bus(c % self.params.n_dies, start, PAGE_BYTES,
                           match_mode=False)
         return out

@@ -1,0 +1,33 @@
+"""Workload frontend: RunConfig in, RunReport out, serial or event-driven.
+
+The public API of workload execution:
+
+  * :class:`RunConfig`   — one validated, frozen knob surface (presets:
+    ``eager()``, ``buffered()``, ``reliable()``, ``open_loop()``,
+    ``event_serial()``);
+  * :func:`replay`       — execute a workload's op stream against a
+    MatchBackend, serially or through the event-loop simulator;
+  * :class:`RunReport`   — the one result schema (nested ``latency`` /
+    ``energy`` / ``counters`` / ``reliability`` sections) shared with the
+    analytic simulator's ``workload.runner.run``.
+
+``workload.runner.run_functional`` remains as a deprecated shim over
+:func:`replay`.
+"""
+from .config import ARRIVALS, MODES, SCHEDULERS, RunConfig
+from .eventloop import EventLoop, Request
+from .replay import ReplayCore, replay
+from .report import (CounterReport, EnergyReport, LatencyReport,
+                     ReliabilityReport, RunReport)
+from .scheduler import (FairShareScheduler, FifoScheduler,
+                        ReadPriorityScheduler, make_scheduler)
+
+__all__ = [
+    "ARRIVALS", "MODES", "SCHEDULERS", "RunConfig",
+    "EventLoop", "Request",
+    "ReplayCore", "replay",
+    "CounterReport", "EnergyReport", "LatencyReport",
+    "ReliabilityReport", "RunReport",
+    "FairShareScheduler", "FifoScheduler", "ReadPriorityScheduler",
+    "make_scheduler",
+]

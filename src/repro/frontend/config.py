@@ -1,0 +1,160 @@
+"""RunConfig: the one validated knob surface of the workload frontend.
+
+``run_functional`` grew one keyword per PR (``burst``, ``fused``,
+``write_buffer``, ``write_high_water``, ``reliability``) and the
+event-driven frontend adds arrival processes, scheduler policies and NCQ
+admission on top — a combinatorial kwarg sprawl no caller could validate.
+This module collapses all of it into one frozen dataclass:
+
+  * **execution mode** — ``mode="serial"`` is the classic synchronous
+    replay (one client, a barrier per burst); ``mode="event"`` drives the
+    same functional core through the event-loop simulator
+    (:mod:`repro.frontend.eventloop`) with N concurrent client streams,
+    a bounded NCQ and a scheduler policy;
+  * **burst shaping** — ``burst`` (max reads coalesced per backend
+    flush), ``fused`` (one fused lookup launch vs split search+gather);
+  * **write path** — ``write_buffer``/``write_high_water`` (the §VI DRAM
+    coalescing buffer with deferred grouped programs);
+  * **reliability tier** — ``reliability=ReliabilityState(...)``;
+  * **event frontend** — ``concurrency`` client streams, ``arrival``
+    process (``zero``/``poisson``/``trace``), ``scheduler`` policy
+    (``fifo``/``read_priority``/``fair_share``), ``ncq_depth`` bound and
+    the per-stream ``seed``.
+
+Every combination is validated at construction (`__post_init__`), so a
+config that constructs is a config that runs.  Named presets cover the
+common shapes: ``RunConfig.eager()``, ``.buffered()``, ``.reliable()``,
+``.open_loop()`` and ``.event_serial()`` (the bit-parity anchor: event
+mode degenerated to one stream, zero inter-arrival, FIFO — must replay
+bit-identically to ``mode="serial"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+MODES = ("serial", "event")
+ARRIVALS = ("zero", "poisson", "trace")
+SCHEDULERS = ("fifo", "read_priority", "fair_share")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Validated, immutable configuration of one workload replay."""
+
+    # --- execution mode
+    mode: str = "serial"
+    # --- backend burst shaping
+    burst: int = 64
+    fused: bool = False
+    # --- write path (§VI DRAM write buffer)
+    write_buffer: typing.Any = False     # bool | repro.buffer.WriteBuffer
+    write_high_water: int = 16
+    # --- reliability tier (repro.reliability.ReliabilityState | None)
+    reliability: typing.Any = None
+    # --- event frontend: arrivals
+    concurrency: int = 1                 # concurrent client streams
+    arrival: str = "zero"                # zero | poisson | trace
+    arrival_rate_qps: float | None = None    # poisson: offered load, ops/s
+    arrival_times_ns: tuple | None = None    # trace: explicit times (N,)
+    # --- event frontend: queueing
+    scheduler: str = "fifo"              # fifo | read_priority | fair_share
+    ncq_depth: int = 64                  # bounded native command queue
+    seed: int = 0                        # arrival-process seed root
+    record_trace: bool = False           # keep the full event trace
+
+    # ------------------------------------------------------------ checks
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"arrival {self.arrival!r} not in {ARRIVALS}")
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"scheduler {self.scheduler!r} not in {SCHEDULERS}")
+        for field in ("burst", "write_high_water", "concurrency",
+                      "ncq_depth"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{field} must be an int >= 1, got {v!r}")
+        if self.arrival == "poisson":
+            if self.mode != "event":
+                raise ValueError("poisson arrivals need mode='event'")
+            if not self.arrival_rate_qps or self.arrival_rate_qps <= 0:
+                raise ValueError("poisson arrivals need "
+                                 f"arrival_rate_qps > 0, got "
+                                 f"{self.arrival_rate_qps!r}")
+        elif self.arrival_rate_qps is not None:
+            raise ValueError(f"arrival_rate_qps only applies to "
+                             f"arrival='poisson', not {self.arrival!r}")
+        if self.arrival == "trace":
+            if self.mode != "event":
+                raise ValueError("trace arrivals need mode='event'")
+            if self.arrival_times_ns is None:
+                raise ValueError("trace arrivals need arrival_times_ns")
+            object.__setattr__(self, "arrival_times_ns",
+                               tuple(float(t) for t in
+                                     self.arrival_times_ns))
+            if any(t < 0 for t in self.arrival_times_ns):
+                raise ValueError("arrival_times_ns must be >= 0")
+        elif self.arrival_times_ns is not None:
+            raise ValueError("arrival_times_ns only applies to "
+                             f"arrival='trace', not {self.arrival!r}")
+        if self.mode == "serial":
+            # Event-only knobs left at non-defaults would silently not
+            # apply — refuse instead.
+            for field, default in (("concurrency", 1),
+                                   ("arrival", "zero"),
+                                   ("scheduler", "fifo")):
+                if getattr(self, field) != default:
+                    raise ValueError(
+                        f"{field}={getattr(self, field)!r} needs "
+                        "mode='event' (the serial replay has no queue)")
+        if not isinstance(self.write_buffer, bool):
+            from repro.buffer.writebuffer import WriteBuffer
+            if not isinstance(self.write_buffer, WriteBuffer):
+                raise ValueError("write_buffer must be a bool or a "
+                                 f"WriteBuffer, got {self.write_buffer!r}")
+
+    # ------------------------------------------------------------ presets
+    @classmethod
+    def eager(cls, **kw) -> "RunConfig":
+        """Serial replay, eager per-write programs — the bit-exactness
+        reference every other configuration is held to."""
+        return cls(**kw)
+
+    @classmethod
+    def buffered(cls, *, write_high_water: int = 16, **kw) -> "RunConfig":
+        """Serial replay through the §VI DRAM write buffer: hot-page
+        coalescing, grouped deferred programs, overlay reads."""
+        return cls(write_buffer=True, write_high_water=write_high_water,
+                   **kw)
+
+    @classmethod
+    def reliable(cls, reliability, **kw) -> "RunConfig":
+        """Serial replay with the §IV-C reliability tier attached."""
+        if reliability is None:
+            raise ValueError("reliable() needs a ReliabilityState")
+        return cls(reliability=reliability, **kw)
+
+    @classmethod
+    def open_loop(cls, arrival_rate_qps: float, *, concurrency: int = 16,
+                  scheduler: str = "read_priority", **kw) -> "RunConfig":
+        """Open-loop event-driven run: Poisson arrivals at the offered
+        QPS across ``concurrency`` client streams."""
+        return cls(mode="event", arrival="poisson",
+                   arrival_rate_qps=arrival_rate_qps,
+                   concurrency=concurrency, scheduler=scheduler, **kw)
+
+    @classmethod
+    def event_serial(cls, **kw) -> "RunConfig":
+        """The degenerate event config — one stream, zero inter-arrival,
+        FIFO — whose replay must be bit-identical to ``mode='serial'``
+        (tests/test_frontend.py holds this across every backend)."""
+        return cls(mode="event", arrival="zero", concurrency=1,
+                   scheduler="fifo", **kw)
+
+    # ------------------------------------------------------------- helper
+    def with_(self, **kw) -> "RunConfig":
+        """A copy with the given fields replaced (re-validated)."""
+        return dataclasses.replace(self, **kw)

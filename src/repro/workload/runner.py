@@ -1,452 +1,83 @@
-"""Closed-loop workload executor + metrics (QPS, latency percentiles, energy).
+"""Closed-loop analytic executor + the legacy functional-replay shim.
 
 Mirrors the paper's measurement protocol (§VI-A4, footnote 6): statistics
 start after a 30 % warmup; QPS = measured queries / measured makespan.
 
-Two executors live here:
+Two executors are reachable from here:
 
   * ``run``            — the *timing* simulation on SSDSim (latency/energy,
                          no real data).  Reads are match-mode
                          search+gather pairs, writes are buffered page
                          programs, and YCSB-E scans (``ops == 2``) are
                          match-mode multi-page READS over the key pages
-                         the range touches — never writes;
-  * ``run_functional`` — the *functional* execution of the same op stream
-                         against real programmed pages through a
-                         MatchBackend, batching read bursts.  With
-                         ``fused=False`` each burst is one search launch +
-                         one gather launch on the kernel backend (§IV-E);
-                         with ``fused=True`` the burst goes through
-                         ``submit_lookup`` and resolves in ONE fused
-                         launch — match, slot select and value gather all
-                         on-device, the §III-B in-buffer pipelining.  All
-                         backend/mode combinations must return identical
-                         read values (tests/test_backend_parity).
+                         the range touches — never writes.  Returns a
+                         :class:`repro.frontend.RunReport` (source
+                         ``"analytic"``);
+  * ``run_functional`` — DEPRECATED shim over the frontend API: the
+                         functional execution of the op stream against
+                         real programmed pages now lives in
+                         :func:`repro.frontend.replay`, configured by a
+                         :class:`repro.frontend.RunConfig` (which also
+                         unlocks the event-driven mode: concurrent client
+                         streams, NCQ admission, scheduler policies).
+                         The shim forwards the historical kwargs and
+                         warns; new code calls ``replay(wl, backend,
+                         RunConfig(...))`` directly.
 
-``run_functional`` on a timeline-coupled ``ShardedSsdBackend`` closes the
-loop between the two executors: the functional replay reports each flush's
-per-chip batch sizes to ``flash/timeline.py``, which advances the same
-die/channel/PCIe resource timelines ``run`` uses — so the result carries
-bit-exact values *and* a simulated per-burst latency distribution + energy
-account (fig14/15-style) from one execution.
+``RunResult`` and ``FunctionalRunResult`` are now aliases of
+``RunReport`` — the one result schema of every executor — whose legacy
+flat attributes (``qps``, ``n_reads``, ``sim_makespan_ns``, ...) remain
+readable properties over the nested sections.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 
 import numpy as np
 
-from repro.backend import as_backend
-from repro.buffer.writebuffer import WriteBuffer
-from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
-from repro.core.commands import Command
-from repro.core.page import mask_header_slots
-from repro.core.range_query import evaluate_plan_on_pages, exact_range
 from repro.flash.params import FlashParams
 from repro.flash.ssd import SSDSim
-from repro.reliability import UncorrectableReadError, require_clean
-from .ycsb import KEYS_PER_PAGE, Workload, value_page_of
+from repro.frontend import RunConfig, RunReport
+from repro.frontend import replay as _replay
+from .ycsb import KEYS_PER_PAGE, Workload
 
 WARMUP_FRACTION = 0.30
 FULL_MASK = 0xFFFFFFFFFFFFFFFF
 
-
-@dataclasses.dataclass
-class RunResult:
-    qps: float
-    read_median_ns: float
-    read_p25_ns: float
-    read_p75_ns: float
-    read_p99_ns: float
-    energy_pj: float
-    programs: int
-    senses: int
-    internal_bytes: int
-    pcie_bytes: int
-    cache_hit_rate: float
-    absorbed_writes: int
-    batched_searches: int
-    makespan_ns: float
-    writes: int = 0           # write ops simulated (scan ops excluded)
-    scans: int = 0            # YCSB-E scan ops simulated as multi-page reads
-
-
-@dataclasses.dataclass
-class FunctionalRunResult:
-    read_values: np.ndarray   # (N,) uint64: full value read (0 where no hit)
-    read_hits: np.ndarray     # (N,) bool: True where a read op found its key
-    n_reads: int
-    n_writes: int
-    flushes: int              # backend flushes issued by the executor
-    kernel_launches: int      # device launches (0 on the scalar backend)
-    staged_bytes: int = 0     # host->device page bytes (0 on scalar)
-    result_bytes: int = 0     # exact device->host result payload bytes
-    # Write path.  Unbuffered, every write reprograms its value page
-    # synchronously: programs == n_writes.  Through the §VI DRAM write
-    # buffer, hot-page writes coalesce and dirty pages flush in grouped
-    # deferred-program bursts: programs < n_writes on any skewed stream,
-    # and reads of buffered pages are DRAM hits (buffer_read_hits) that
-    # never queue a device command.
-    programs: int = 0         # value-page programs issued during the replay
-    write_flushes: int = 0    # write-buffer group flushes (0 unbuffered)
-    buffer_read_hits: int = 0  # reads served from the write-buffer overlay
-    # YCSB-E scans (op 2): matched-key count per scan op, 0 elsewhere.
-    # Each scan replays as one Op.PLAN per key page (fused in-latch range
-    # evaluation) and must be bit-identical across backends.
-    scan_counts: np.ndarray | None = None
-    n_scans: int = 0
-    # Timeline coupling (sharded backend with a BurstTimeline attached):
-    # simulated SSD time/energy for the replayed op stream, so fig14/15-
-    # style latency distributions come out of the *functional* run too.
-    burst_latencies_ns: np.ndarray | None = None   # one entry per flush
-    write_latencies_ns: np.ndarray | None = None   # one entry per program
-    sim_makespan_ns: float = 0.0
-    sim_energy_pj: float = 0.0
-    # Reliability tier (run with ``reliability=ReliabilityState(...)``):
-    # per-op error outcomes.  A read/scan whose page fails outer-code
-    # decode surfaces here as a typed per-op error — never as a silently
-    # wrong value — and pages the open burst marked stale are refreshed
-    # (rewritten through the deferred-program path) at end of replay.
-    read_errors: np.ndarray | None = None   # (N,) bool: UncorrectableReadError
-    n_read_errors: int = 0
-    refreshes: int = 0                      # stale pages rewritten at drain
-    reliability_stats: object | None = None  # ReliabilityStats snapshot
+# Legacy names: both executor result schemas unified into RunReport.
+RunResult = RunReport
+FunctionalRunResult = RunReport
 
 
 def run_functional(workload: Workload, backend, *, burst: int = 64,
                    fused: bool = False,
-                   write_buffer: "WriteBuffer | bool" = False,
+                   write_buffer=False,
                    write_high_water: int = 16,
-                   reliability=None) -> FunctionalRunResult:
-    """Execute the op stream against real pages through a MatchBackend.
+                   reliability=None) -> RunReport:
+    """DEPRECATED: call ``repro.frontend.replay(wl, backend, RunConfig)``.
 
-    Key id ``k`` lives on key page ``k // 504`` at entry ``k % 504`` with
-    stored key ``k + 1`` (nonzero, distinct from the vacant-slot sentinel);
-    its value sits at the same entry of the §V-A paired value page.  Reads
-    accumulate into bursts of up to ``burst`` queries.  With
-    ``fused=False`` the burst's searches flush as one batch, then its value
-    gathers as a second — two kernel launches on the batched backend.  With
-    ``fused=True`` every read becomes a ``submit_lookup`` and the whole
-    burst resolves in one fused launch, no host bitmap decode in between;
-    lazy tickets keep each burst's outputs device-resident until the NEXT
-    burst has been flushed, so host staging and device compute of adjacent
-    bursts overlap (the depth-1 pipeline — results are position-tagged, so
-    replay stays bit-identical).
-    Writes, unbuffered (default): a write flushes the open burst first
-    (read-your-writes), updates the host mirror and reprograms the value
-    page through the backend — which invalidates exactly that page's row
-    in the device-resident plane store.  One program + one forced burst
-    split per write: the eager reference.
-    Writes, buffered (``write_buffer=True`` or a ``WriteBuffer``): the §VI
-    DRAM write-buffer configuration.  A write *absorbs* into the buffer —
-    no forced ``resolve_burst``, no program; repeated writes to a hot page
-    coalesce last-wins.  Reads of a buffered page are served from the DRAM
-    overlay (read-your-writes without a device command); reads of clean
-    pages queue as usual, and stay correct because the on-flash image only
-    changes at a buffer flush, which resolves the open burst first.  Dirty
-    pages drain at the ``write_high_water`` mark (and at end of stream) as
-    ONE deferred-program group per flush — grouped plane-store staging,
-    async program-line accounting on a timeline-coupled backend — so
-    ``programs`` comes out *below* ``n_writes`` on any skewed stream while
-    read values stay bit-identical to the unbuffered eager replay.
-    A scan op (YCSB-E, ``ops == 2``) replays as ONE ``Op.PLAN`` per key
-    page the scanned range touches: the §V-C exact-range decomposition
-    evaluates fused in-latch and 64 B per page crosses back, regardless
-    of the plan's pass count.
-    With ``reliability=ReliabilityState(...)`` the replay runs against
-    fault-injected pages: the state installs on the backend after the
-    bulk load (so the fault model corrupts the loaded images), every op's
-    result passes through :func:`repro.reliability.require_clean`, pages
-    that fail outer-code decode mark ``read_errors[qi]`` instead of
-    returning a wrong value, and pages flagged CLEAN_NEEDS_REFRESH are
-    rewritten (fresh timestamp, errors cleared) through the deferred
-    Op.PROGRAM path at end of replay (``refreshes``).
+    Forwards the historical kwarg surface into a serial-mode
+    :class:`RunConfig` and returns the (shape-compatible)
+    :class:`RunReport`.  Kept one deprecation cycle so pre-RunConfig
+    callers keep working bit-identically.
     """
-    if workload.keys is None:
-        raise ValueError("workload has no key stream "
-                         "(regenerate with ycsb.generate)")
-    backend = as_backend(backend)
-    n_key_pages = workload.n_index_pages // 2
-    n_keys = n_key_pages * KEYS_PER_PAGE
-    stored_keys = np.arange(1, n_keys + 1, dtype=np.uint64)
-    # Deterministic initial values (odd, so never the vacant sentinel).
-    values = (stored_keys * np.uint64(0x9E3779B97F4A7C15)) | np.uint64(1)
-
-    for p in range(n_key_pages):
-        s = p * KEYS_PER_PAGE
-        backend.program_entries(p, stored_keys[s:s + KEYS_PER_PAGE])
-        backend.program_entries(value_page_of(p, n_key_pages),
-                                values[s:s + KEYS_PER_PAGE])
-
-    # Fault injection corrupts the images loaded above (install also
-    # switches every later flush onto the reliability path).
-    if reliability is not None:
-        reliability.install(backend)
-
-    # Timeline-coupled backends (sharded + BurstTimeline) measure the
-    # replayed op stream only — the bulk load above is setup, not workload.
-    timeline = getattr(backend, "timeline", None)
-    if timeline is not None:
-        timeline.reset()
-
-    if write_buffer is True:
-        write_buffer = WriteBuffer(high_water=write_high_water)
-    wb: WriteBuffer | None = write_buffer or None
-
-    n = len(workload.ops)
-    out = np.zeros(n, dtype=np.uint64)
-    hits = np.zeros(n, dtype=bool)
-    read_errors = np.zeros(n, dtype=bool)
-    scan_counts = np.zeros(n, dtype=np.int64)
-    flushes = 0
-    n_scans = 0
-    pending: list[int] = []                 # op indices of queued reads
-    inflight: list[list] = []               # flushed, not-yet-drained bursts
-
-    def drain(lookups) -> None:
-        for qi, t in lookups:
-            try:
-                r = require_clean(t.result())
-            except UncorrectableReadError:
-                read_errors[qi] = True
-                continue
-            if r.value_slot is None:
-                continue
-            out[qi] = int.from_bytes(r.value, "little")
-            hits[qi] = True
-
-    def drain_inflight() -> None:
-        while inflight:
-            drain(inflight.pop(0))
-
-    def resolve_burst_fused() -> None:
-        """One submit_lookup per read: the whole burst is ONE launch.
-
-        With lazy tickets the flush only *dispatches* the launch; this
-        burst's host tail is deferred until the NEXT burst has been
-        flushed (depth-1 pipeline), so staging of burst k+1 overlaps
-        device compute of burst k.  Results are position-tagged, so the
-        deferred drain is order-independent and bit-identical.
-        """
-        nonlocal flushes
-        if not pending:
-            return
-        lookups = [(qi, backend.submit_lookup(Command.lookup(
-            int(workload.key_pages[qi]), int(workload.value_pages[qi]),
-            int(stored_keys[workload.keys[qi]]), FULL_MASK)))
-            for qi in pending]
-        pending.clear()
-        backend.flush()
-        flushes += 1
-        inflight.append(lookups)
-        while len(inflight) > 1:
-            drain(inflight.pop(0))
-
-    def resolve_burst_split() -> None:
-        """Search launch, host bitmap decode, then gather launch."""
-        nonlocal flushes
-        if not pending:
-            return
-        # Page routing comes from the workload's own placement fields so the
-        # timing executor (run) and this one always model the same layout.
-        searches = [(qi, backend.submit_search(Command.search(
-            int(workload.key_pages[qi]),
-            int(stored_keys[workload.keys[qi]]), FULL_MASK)))
-            for qi in pending]
-        pending.clear()
-        backend.flush()
-        flushes += 1
-        gathers = []
-        for qi, t in searches:
-            try:
-                bitmap = mask_header_slots(
-                    require_clean(t.result()).bitmap_words)
-            except UncorrectableReadError:
-                read_errors[qi] = True
-                continue
-            slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
-            if slots.size == 0:
-                continue
-            value_slot = int(slots[0])      # same entry on the value page
-            gathers.append((qi, value_slot, backend.submit_gather(
-                Command.gather(int(workload.value_pages[qi]),
-                               1 << (value_slot // SLOTS_PER_CHUNK)))))
-        backend.flush()
-        flushes += 1
-        for qi, value_slot, g in gathers:
-            off = (value_slot % SLOTS_PER_CHUNK) * 8
-            try:
-                r = require_clean(g.result())
-            except UncorrectableReadError:
-                read_errors[qi] = True
-                continue
-            out[qi] = int.from_bytes(bytes(r.chunks[0][off:off + 8]),
-                                     "little")
-            hits[qi] = True
-
-    resolve_burst = resolve_burst_fused if fused else resolve_burst_split
-
-    def run_scan(qi: int) -> None:
-        """YCSB-E scan: ONE Op.PLAN per touched key page, fused in-latch.
-
-        Scans key ids [k, k + len); stored key of id k is k + 1, and ids
-        are laid out contiguously (page p holds ids [p*504, (p+1)*504)),
-        so the plan only needs the pages overlapping the stored-key range
-        [lo, hi) — at most ceil(len/504) + 1 of them.  Key pages are
-        never reprogrammed, so a scan needs no ordering against the write
-        stream — only the open read burst is resolved first so the plan
-        flush stays a dedicated launch.
-        """
-        nonlocal flushes, n_scans
-        resolve_burst()
-        k = int(workload.keys[qi])
-        lo = k + 1
-        hi = min(lo + int(workload.scan_lens[qi]), n_keys + 1)
-        if lo >= hi:
-            return
-        p0 = (lo - 1) // KEYS_PER_PAGE     # page of stored key lo
-        p1 = (hi - 2) // KEYS_PER_PAGE     # page of stored key hi - 1
-        try:
-            bitmaps = evaluate_plan_on_pages(
-                backend, exact_range(lo, hi, width=64),
-                list(range(p0, min(p1, n_key_pages - 1) + 1)))
-        except UncorrectableReadError:
-            # Any touched page failing outer-code decode voids the whole
-            # scan — a partial count would be a silently wrong result.
-            read_errors[qi] = True
-            flushes += 1
-            n_scans += 1
-            return
-        flushes += 1
-        total = 0
-        for bm in bitmaps:
-            bits = unpack_bitmap(mask_header_slots(bm), 512)
-            total += int(bits.sum())
-        scan_counts[qi] = total
-        n_scans += 1
-
-    n_reads = n_writes = programs = write_flushes = 0
-    for qi in range(n):
-        if workload.ops[qi] == 0:
-            n_reads += 1
-            if wb is not None:
-                # Read-your-writes from DRAM: a dirty value page serves the
-                # read straight from the buffered image — no device command.
-                # (Key pages are never written, so a buffered value page
-                # always implies the key exists on its key page.)
-                overlay = wb.get(int(workload.value_pages[qi]))
-                if overlay is not None:
-                    k = int(workload.keys[qi])
-                    out[qi] = overlay[k % KEYS_PER_PAGE]
-                    hits[qi] = True
-                    continue
-            pending.append(qi)
-            if len(pending) >= burst:
-                resolve_burst()
-        elif workload.ops[qi] == 2:
-            run_scan(qi)
-        else:
-            n_writes += 1
-            k = int(workload.keys[qi])
-            values[k] = np.uint64(qi * 2 + 1)   # tagged by op index, odd
-            p = k // KEYS_PER_PAGE
-            s = p * KEYS_PER_PAGE
-            if wb is not None:
-                # Absorb into the DRAM buffer; the on-flash image stays as
-                # queued reads expect it until the grouped flush below.
-                wb.put(value_page_of(p, n_key_pages),
-                       values[s:s + KEYS_PER_PAGE])
-                if wb.should_flush:
-                    resolve_burst()     # queued reads precede the programs
-                    if reliability is not None:
-                        drain_inflight()
-                    programs += wb.flush(backend)
-                    write_flushes += 1
-            else:
-                resolve_burst()             # read-your-writes ordering
-                if reliability is not None:
-                    # The reliability finalize verifies hits against the
-                    # on-flash image at RESOLVE time (selective
-                    # verification is a re-read, not a kernel output), so
-                    # the image must not change under an in-flight burst:
-                    # drain the depth-1 pipeline before reprogramming.
-                    drain_inflight()
-                backend.program_entries(value_page_of(p, n_key_pages),
-                                        values[s:s + KEYS_PER_PAGE])
-                programs += 1
-    resolve_burst()
-    if wb is not None and wb.n_dirty:
-        if reliability is not None:
-            drain_inflight()    # resolve-time verification, see write path
-        programs += wb.flush(backend)
-        write_flushes += 1
-    drain_inflight()
-    refreshes = 0
-    if reliability is not None:
-        refreshes = _drain_refreshes(backend, reliability)
-    result = FunctionalRunResult(
-        read_values=out, read_hits=hits, n_reads=n_reads, n_writes=n_writes,
-        flushes=flushes,
-        kernel_launches=backend.stats.kernel_launches,
-        staged_bytes=backend.stats.staged_bytes,
-        result_bytes=backend.stats.result_bytes,
-        programs=programs, write_flushes=write_flushes,
-        buffer_read_hits=wb.stats.read_hits if wb is not None else 0,
-        scan_counts=scan_counts if n_scans else None, n_scans=n_scans,
-        read_errors=read_errors if reliability is not None else None,
-        n_read_errors=int(read_errors.sum()), refreshes=refreshes,
-        reliability_stats=reliability.stats if reliability is not None
-        else None)
-    if timeline is not None:
-        result.burst_latencies_ns = np.asarray(timeline.burst_latencies)
-        result.write_latencies_ns = np.asarray(timeline.write_latencies)
-        result.sim_makespan_ns = timeline.now
-        result.sim_energy_pj = timeline.energy_pj
-    return result
-
-
-def _drain_refreshes(backend, reliability) -> int:
-    """Rewrite every page the open bursts flagged CLEAN_NEEDS_REFRESH.
-
-    A refresh is read-through-ECC then reprogram: sub-threshold raw errors
-    are corrected (the simulator's ``_repair`` restores the clean image),
-    the entries are re-extracted and ride the deferred ``Op.PROGRAM`` path
-    with a fresh timestamp — so the rewrite groups and coalesces exactly
-    like workload writes and later opens see a young, error-free page.
-    Pages whose raw error count exceeds the outer-code budget cannot be
-    refreshed (the data is gone); they stay marked and keep surfacing as
-    typed errors.
-    """
-    from repro.core.page import entries_from_plain
-    chips = backend.chips
-    tickets = []
-    for addr in sorted(reliability.refresh_due):
-        chip, local = chips.route(addr)
-        sp = chip.pages.get(local)
-        if sp is None:
-            continue
-        if sp.injected_error_bits > reliability.policy.ecc.t_correctable:
-            continue                       # beyond refresh: uncorrectable
-        if sp.injected_error_bits:
-            reliability.stats.corrected_bits += sp.injected_error_bits
-            chip._repair(sp, local)
-        plain = chip._derandomize_page(sp, local)
-        entries = entries_from_plain(plain, sp.n_entries)
-        tickets.append(backend.submit_program(
-            addr, entries, timestamp_ns=reliability.now_ns))
-    if tickets:
-        backend.flush()
-    reliability.refresh_due.clear()
-    reliability.stats.refreshes += len(tickets)
-    return len(tickets)
+    warnings.warn(
+        "run_functional(...) is deprecated; use "
+        "repro.frontend.replay(workload, backend, RunConfig(...)) — "
+        "presets: RunConfig.eager()/.buffered()/.reliable()",
+        DeprecationWarning, stacklevel=2)
+    return _replay(workload, backend, RunConfig(
+        burst=burst, fused=fused, write_buffer=write_buffer,
+        write_high_water=write_high_water, reliability=reliability))
 
 
 def run(workload: Workload, *, params: FlashParams, system: str,
         cache_coverage: float, clients: int = 16,
         full_page_read_ratio: float = 0.0,
         batch_deadline_ns: float | None = None,
-        power_budget_ma: float | None = None, seed: int = 0) -> RunResult:
+        power_budget_ma: float | None = None, seed: int = 0) -> RunReport:
     """Execute a workload closed-loop on one simulated SSD."""
     cache_pages = int(round(cache_coverage * workload.n_index_pages))
     sim = SSDSim(params, n_index_pages=workload.n_index_pages,
@@ -475,7 +106,7 @@ def run(workload: Workload, *, params: FlashParams, system: str,
 
     def scan_pages(qi: int) -> list[int]:
         """Key pages a YCSB-E scan touches — same placement arithmetic as
-        the functional executor's ``run_scan``, so both executors model an
+        the functional executor's scan path, so both executors model an
         identical page footprint for one op stream."""
         if workload.keys is None or workload.scan_lens is None:
             return [int(workload.key_pages[qi])]
@@ -528,7 +159,7 @@ def run(workload: Workload, *, params: FlashParams, system: str,
         else np.array([0.0])
     measured = n - warmup
     s, m = sim.stats, stats_mark
-    return RunResult(
+    return RunReport.from_analytic(
         qps=measured / (makespan / 1e9) if makespan > 0 else 0.0,
         read_median_ns=float(np.median(lats)),
         read_p25_ns=float(np.percentile(lats, 25)),
@@ -543,6 +174,7 @@ def run(workload: Workload, *, params: FlashParams, system: str,
         absorbed_writes=sim.cache.stats.absorbed_writes,
         batched_searches=s.batched_searches - (m.batched_searches if m else 0),
         makespan_ns=makespan,
+        reads=s.reads - (m.reads if m else 0),
         writes=s.writes - (m.writes if m else 0),
         scans=s.scans - (m.scans if m else 0),
     )

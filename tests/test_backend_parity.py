@@ -15,7 +15,7 @@ from repro.core.page import mask_header_slots
 from repro.core.range_query import evaluate_plan_on_pages, exact_range
 from repro.index.btree import SimBTree
 from repro.index.hashindex import SimHashIndex
-from repro.workload.runner import run_functional
+from repro.frontend import RunConfig, replay
 from repro.workload.ycsb import generate
 
 N_PAGES = 12
@@ -287,8 +287,8 @@ def test_ycsb_run_functional_fused_identical():
     for name, fused in (("scalar", False), ("scalar", True),
                         ("batched", False), ("batched", True)):
         arr = SimChipArray(n_chips=4, pages_per_chip=16, device_seed=3)
-        outs[(name, fused)] = run_functional(wl, make_backend(name, arr),
-                                             burst=32, fused=fused)
+        outs[(name, fused)] = replay(wl, make_backend(name, arr),
+                                     RunConfig(burst=32, fused=fused))
     ref = outs[("scalar", False)]
     for r in outs.values():
         np.testing.assert_array_equal(ref.read_values, r.read_values)
@@ -306,7 +306,8 @@ def test_ycsb_run_functional_identical():
     outs = {}
     for name in ("scalar", "batched"):
         arr = SimChipArray(n_chips=4, pages_per_chip=16, device_seed=3)
-        outs[name] = run_functional(wl, make_backend(name, arr), burst=32)
+        outs[name] = replay(wl, make_backend(name, arr),
+                            RunConfig(burst=32))
     np.testing.assert_array_equal(outs["scalar"].read_values,
                                   outs["batched"].read_values)
     np.testing.assert_array_equal(outs["scalar"].read_hits,

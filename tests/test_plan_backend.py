@@ -18,7 +18,7 @@ from repro.core.range_query import (MaskedQuery, RangePlan,
                                     approximate_range,
                                     evaluate_plan_on_pages,
                                     evaluate_plan_per_pass, exact_range)
-from repro.workload.runner import run_functional
+from repro.frontend import RunConfig, replay
 from repro.workload.ycsb import generate
 
 N_PAGES = 12
@@ -227,7 +227,7 @@ def test_ycsb_scan_replay_bit_identical():
             channels=2, dies_per_channel=2, pages_per_chip=16,
             device_seed=3, timeline=True),
     }.items():
-        outs[name] = run_functional(wl, make(), burst=32, fused=True)
+        outs[name] = replay(wl, make(), RunConfig(burst=32, fused=True))
     ref = outs["scalar"]
     n_keys = 4 * 504
     for r in outs.values():

@@ -28,7 +28,7 @@ from repro.reliability import (FaultModel, ReliabilityPolicy,
                                majority_flip_prob,
                                sense_false_negative_bound,
                                sense_false_positive_bound)
-from repro.workload.runner import run_functional
+from repro.frontend import RunConfig, replay
 from repro.workload.ycsb import generate
 
 BACKENDS = ("scalar", "batched", "sharded")
@@ -194,8 +194,8 @@ def _functional(name, wl, policy, fault, **kw):
         device_seed=3)
     bkw = {"use_kernel": False} if name == "sharded" else {}
     rel = ReliabilityState(policy, fault)
-    res = run_functional(wl, make_backend(name, arr, **bkw), burst=16,
-                         reliability=rel, **kw)
+    res = replay(wl, make_backend(name, arr, **bkw),
+                 RunConfig.reliable(rel, burst=16, **kw))
     return res, rel
 
 

@@ -17,7 +17,7 @@ from repro.core.engine import SimChipArray
 from repro.flash.timeline import BurstTimeline, ChipBurst
 from repro.index.btree import SimBTree
 from repro.index.hashindex import SimHashIndex
-from repro.workload.runner import run_functional
+from repro.frontend import RunConfig, replay
 from repro.workload.ycsb import generate
 
 N_PAGES = 16
@@ -279,8 +279,8 @@ def ycsb_replays():
             device_seed=3, timeline=True),
     }.items():
         for fused in (False, True):
-            outs[(name, fused)] = run_functional(wl, make(), burst=32,
-                                                 fused=fused)
+            outs[(name, fused)] = replay(wl, make(),
+                                         RunConfig(burst=32, fused=fused))
     return wl, outs
 
 

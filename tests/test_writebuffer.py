@@ -8,7 +8,7 @@ Contracts held here:
   * ``MatchBackend.submit_program`` — per-page last-wins coalescing inside
     a burst, programs execute before the burst's other commands, grouped
     plane-store staging ships each programmed row exactly once;
-  * buffered ``run_functional`` — bit-identical ``read_values``/
+  * buffered ``replay`` — bit-identical ``read_values``/
     ``read_hits`` to the eager unbuffered scalar reference across scalar /
     batched / sharded x split / fused, with ``programs < n_writes`` on the
     skewed YCSB-A stream (hot-page coalescing) and overlay reads counted;
@@ -25,7 +25,8 @@ from repro.buffer.writebuffer import WriteBuffer
 from repro.core.commands import Command
 from repro.core.engine import SimChipArray
 from repro.flash.params import DEFAULT_PARAMS, PAGE_BYTES
-from repro.workload.runner import run, run_functional
+from repro.frontend import RunConfig, replay
+from repro.workload.runner import run
 from repro.workload.ycsb import (KEYS_PER_PAGE, Workload, generate,
                                  value_page_of)
 
@@ -151,7 +152,7 @@ def test_sharded_program_group_reports_to_timeline():
 
 
 # --------------------------------------------------------------------------
-# Buffered run_functional: read-your-writes + parity + coalescing
+# Buffered replay: read-your-writes + parity + coalescing
 # --------------------------------------------------------------------------
 
 def _manual_workload(ops, keys, n_key_pages):
@@ -176,10 +177,10 @@ def test_read_your_writes_served_from_buffer():
         return make_backend(name, SimChipArray(n_chips=2, pages_per_chip=8,
                                                device_seed=3))
 
-    ref = run_functional(wl, mk("scalar"), burst=64)
+    ref = replay(wl, mk("scalar"), RunConfig(burst=64))
     for name in ("scalar", "batched"):
-        r = run_functional(wl, mk(name), burst=64, fused=(name == "batched"),
-                           write_buffer=True)
+        r = replay(wl, mk(name), RunConfig(
+            burst=64, fused=(name == "batched"), write_buffer=True))
         np.testing.assert_array_equal(ref.read_values, r.read_values)
         np.testing.assert_array_equal(ref.read_hits, r.read_hits)
         # reads 2 and 4 hit the dirty page in the buffer; key 900 lives on
@@ -200,8 +201,7 @@ def test_high_water_groups_programs_mid_stream():
     wl = _manual_workload([1] * 10, keys, n_key_pages)
     be = make_backend("batched", SimChipArray(n_chips=2, pages_per_chip=16,
                                               device_seed=1))
-    r = run_functional(wl, be, burst=64, write_buffer=True,
-                       write_high_water=4)
+    r = replay(wl, be, RunConfig.buffered(burst=64, write_high_water=4))
     assert r.write_flushes == 2
     assert r.programs == 10 - 2            # pages 0 and 7 written twice
     assert be.stats.programs == r.programs
@@ -223,11 +223,11 @@ def test_ycsb_a_buffered_parity_all_backends(fused):
         return make_backend(name, SimChipArray(
             n_chips=4, pages_per_chip=pages_per_chip, device_seed=3))
 
-    ref = run_functional(wl, mk("scalar"), burst=64)
+    ref = replay(wl, mk("scalar"), RunConfig(burst=64))
     assert ref.programs == ref.n_writes
     for name in ("scalar", "batched", "sharded"):
-        r = run_functional(wl, mk(name), burst=64, fused=fused,
-                           write_buffer=True, write_high_water=8)
+        r = replay(wl, mk(name), RunConfig.buffered(
+            burst=64, fused=fused, write_high_water=8))
         np.testing.assert_array_equal(ref.read_values, r.read_values)
         np.testing.assert_array_equal(ref.read_hits, r.read_hits)
         assert r.n_writes == ref.n_writes
@@ -242,8 +242,8 @@ def test_buffered_sharded_timeline_write_accounting():
         channels=2, dies_per_channel=2,
         pages_per_chip=max(wl.n_index_pages // 4 + 1, 8),
         device_seed=3, timeline=True)
-    r = run_functional(wl, be, burst=64, fused=True, write_buffer=True,
-                       write_high_water=4)
+    r = replay(wl, be, RunConfig.buffered(burst=64, fused=True,
+                                           write_high_water=4))
     assert r.programs < r.n_writes
     assert len(r.write_latencies_ns) == r.programs
     assert (r.write_latencies_ns > 0).all()
@@ -260,9 +260,9 @@ def test_buffered_scan_workload_parity():
         return make_backend(name, SimChipArray(
             n_chips=4, pages_per_chip=pages_per_chip, device_seed=3))
 
-    ref = run_functional(wl, mk("scalar"), burst=64)
-    r = run_functional(wl, mk("batched"), burst=64, fused=True,
-                       write_buffer=True, write_high_water=8)
+    ref = replay(wl, mk("scalar"), RunConfig(burst=64))
+    r = replay(wl, mk("batched"), RunConfig.buffered(
+        burst=64, fused=True, write_high_water=8))
     np.testing.assert_array_equal(ref.read_values, r.read_values)
     np.testing.assert_array_equal(ref.scan_counts, r.scan_counts)
     assert r.n_scans == ref.n_scans > 0
