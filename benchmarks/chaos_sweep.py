@@ -1,0 +1,195 @@
+"""Chaos sweep: seeded device-fault schedules as an availability gate.
+
+Replays one mixed YCSB stream through the replica-enabled sharded backend
+under four seeded fault schedules (``repro.reliability.FaultSchedule``)
+with the event frontend's robustness tier armed — per-read deadlines,
+bounded seeded-backoff retries, replica failover, bad-block remap and
+host-side degraded reads:
+
+* **healthy** — the no-fault anchor: every counter must be zero and the
+  replay bit-identical to the serial oracle;
+* **transient_stall** — a die stalls for a window mid-run: reads blow
+  their deadline, retry with exponential backoff and complete once the
+  stall clears.  ``chaos_availability`` (completed / total ops) gates a
+  hard >= 0.99 floor here;
+* **dying_die** — stall bursts then a permanent die outage plus program
+  failures: writes remap bad blocks to spares, reads fail over to
+  replicas;
+* **dead_chip** — a whole chip dead from t=0: every op touching it is
+  served from replicas or the host-side scalar path, bit-identically.
+
+The correctness discipline mirrors reliability_sweep: every completed op
+must return the exact closed-form oracle value (initial value
+``((k+1) * phi64) | 1`` or the last prior write's ``qi*2+1`` tag) — a
+fault may delay an answer or fail it with a typed error, never change
+it.  ``chaos_wrong_results`` is a HARD_ZERO in check_regression.py; the
+per-schedule fault counters are seeded-deterministic and gate exactly.
+An overload run (Poisson arrivals far past saturation with a bounded
+overflow queue) additionally exercises the backpressure shed path.
+
+Run from the repo root:  PYTHONPATH=src python -m benchmarks.chaos_sweep
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.backend.sharded import ShardedSsdBackend
+from repro.core.engine import SimChipArray
+from repro.frontend import RunConfig, replay
+from repro.reliability import FaultSchedule
+from repro.workload.ycsb import generate
+
+N_QUERIES = 600
+N_KEY_PAGES = 16
+N_CHIPS = 4
+REPLICAS = 2
+SEED = 11
+
+# Robustness knobs for the fault runs.  Healthy bursts on this geometry
+# complete in < 300 us, so the 500 us deadline never fires fault-free; a
+# burst caught by the 1 ms die stall blows it, and the bounded backoff
+# ladder (100/200/400/800/1600 us) comfortably outlives the stall.
+DEADLINE_NS = 500_000.0
+MAX_RETRIES = 5
+BACKOFF_BASE_NS = 100_000.0
+
+SCHEDULES = (
+    ("healthy", FaultSchedule.healthy(seed=SEED)),
+    ("transient_stall", FaultSchedule.transient_stall(
+        die=0, t_start_ms=0.05, dur_ms=1.0, seed=SEED)),
+    ("dying_die", FaultSchedule.dying_die(
+        die=1, t_fail_ms=0.5, program_fail_prob=0.05, seed=SEED)),
+    ("dead_chip", FaultSchedule.dead_chip(chip=0, seed=SEED)),
+)
+# The stable FaultReport counter schema (see repro/frontend/report.py).
+COUNTERS = ("timeouts", "retries", "backoff_waits", "hedges_won",
+            "failovers", "remapped_blocks", "degraded_ops",
+            "shed_requests", "replica_programs", "program_failures")
+
+
+def _workload():
+    return generate(N_QUERIES, n_key_pages=N_KEY_PAGES, read_ratio=0.8,
+                    alpha=0.9, seed=7)
+
+
+def _backend():
+    """Replica-enabled sharded backend with spare-page headroom (replicas
+    and bad-block remaps both allocate from the top of each chip)."""
+    n_pages = N_KEY_PAGES * 2
+    arr = SimChipArray(
+        n_chips=N_CHIPS,
+        pages_per_chip=(n_pages // N_CHIPS + 1) * (REPLICAS + 1),
+        device_seed=3)
+    return ShardedSsdBackend(arr, use_kernel=False, interpret=True,
+                             replicas=REPLICAS)
+
+
+def _oracle(wl) -> np.ndarray:
+    """Serial-order closed-form answer for every read op.
+
+    Valid for the FIFO concurrency-1 runs below: values are captured at
+    FIRST dispatch (retries re-charge timing only), and zero-inter-
+    arrival FIFO dispatches in stream order, so each read sees exactly
+    the writes that precede it in the stream.
+    """
+    exp = np.zeros(len(wl.ops), dtype=np.uint64)
+    last: dict[int, int] = {}
+    for qi in range(len(wl.ops)):
+        k = int(wl.keys[qi])
+        if wl.ops[qi] == 1:
+            last[k] = qi
+        elif wl.ops[qi] == 0:
+            if k in last:
+                exp[qi] = np.uint64(last[k] * 2 + 1)
+            else:
+                exp[qi] = np.uint64(
+                    (((k + 1) * 0x9E3779B97F4A7C15) % 2**64) | 1)
+    return exp
+
+
+def fault_schedule_sweep() -> None:
+    wl = _workload()
+    oracle = _oracle(wl)
+    is_read = wl.ops == 0
+    wrong = 0
+    p99 = {}
+    for name, sched in SCHEDULES:
+        rep = replay(wl, _backend(), RunConfig.event_serial(
+            fused=True, faults=sched, deadline_ns=DEADLINE_NS,
+            max_retries=MAX_RETRIES, backoff_base_ns=BACKOFF_BASE_NS,
+            seed=SEED))
+        f = rep.faults
+        ok = is_read & ~f.op_errors
+        # Wrong result = a completed read whose value is not the exact
+        # serial-order oracle answer.  Faults must surface as typed
+        # errors/retries/failovers, never as silently wrong data.
+        wrong += int(np.sum(rep.read_values[ok] != oracle[ok]))
+        for c in COUNTERS:
+            emit(f"chaos_{name}_{c}", getattr(f, c),
+                 f"seeded_fault_schedule_{name}")
+        emit(f"chaos_{name}_op_errors", f.n_op_errors,
+             "typed_per_op_errors_timeout+degraded+shed")
+        p99[name] = rep.latency.read_p99_ns
+        emit(f"chaos_{name}_read_p99_us", rep.latency.read_p99_ns / 1e3,
+             "simulated_read_p99_completed_ops_only")
+        if name == "healthy":
+            # replica_programs is write-path mirroring, nonzero even
+            # fault-free; every *fault* counter must be zero.
+            assert f.n_op_errors == 0 and all(
+                getattr(f, c) == 0 for c in COUNTERS
+                if c != "replica_programs"), \
+                "healthy schedule produced nonzero fault counters"
+        if name == "transient_stall":
+            avail = 1.0 - f.n_op_errors / len(wl.ops)
+            assert avail >= 0.99, \
+                f"availability {avail:.4f} under transient stall " \
+                "below the 0.99 floor"
+            emit("chaos_availability", avail,
+                 "completed_ops/total_under_transient_stall_floor_0.99")
+    # Recovery work is charged to the flash timelines, so the stalled
+    # run's tail must sit above the healthy tail — if it doesn't, the
+    # retries were free, which means the timeline never saw them.
+    assert p99["transient_stall"] > p99["healthy"], \
+        "transient-stall p99 not above healthy p99 — recovery looks free"
+    assert wrong == 0, \
+        f"{wrong} completed ops returned wrong values under chaos"
+    emit("chaos_wrong_results", wrong,
+         "completed_ops_vs_serial_oracle_across_all_schedules")
+
+
+def overload_shed() -> None:
+    """Poisson arrivals far past saturation with a tiny overflow bound:
+    the backpressure must shed (typed errors), and every op that still
+    completes must return the exact oracle value — read-only stream, so
+    the oracle is order-independent under read-priority scheduling."""
+    wl = generate(N_QUERIES, n_key_pages=N_KEY_PAGES, read_ratio=1.0,
+                  alpha=0.9, seed=7)
+    oracle = _oracle(wl)
+    rep = replay(wl, _backend(), RunConfig(
+        mode="event", fused=True, arrival="poisson",
+        arrival_rate_qps=5e5, concurrency=8, scheduler="read_priority",
+        ncq_depth=16, shed_capacity=8, seed=SEED,
+        faults=FaultSchedule.healthy(seed=SEED)))
+    f = rep.faults
+    assert f.shed_requests > 0, \
+        "overload run shed nothing — backpressure path not exercised"
+    ok = ~f.op_errors
+    assert int(np.sum(ok)) >= 100, \
+        "overload run completed too few ops for a meaningful oracle check"
+    wrong = int(np.sum(rep.read_values[ok] != oracle[ok]))
+    assert wrong == 0, f"{wrong} completed ops wrong under overload"
+    emit("chaos_overload_shed_requests", f.shed_requests,
+         "poisson_5e5qps_ncq16_overflow_cap8")
+    emit("chaos_overload_completed_ok", int(np.sum(ok)),
+         "non_shed_ops_all_oracle_exact")
+
+
+def main() -> None:
+    fault_schedule_sweep()
+    overload_shed()
+    write_bench_json("chaos_sweep")
+
+
+if __name__ == "__main__":
+    main()

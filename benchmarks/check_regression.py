@@ -23,6 +23,14 @@ name, each with its own tolerance discipline:
     divergence count must be zero in the FRESH run regardless of what any
     baseline says — a nonzero value is a correctness bug, not a
     regression.
+  * chaos counters (``chaos_*``) — the device-fault sweep's exact fault
+    outcomes (timeouts, retries, failovers, remaps, degraded ops, shed
+    requests — all seeded and deterministic, gated exactly), with two
+    special cases: ``chaos_availability`` is a RATIO that must stay above
+    the hard 0.99 floor under the transient-stall schedule, and
+    ``chaos_wrong_results`` is a ``HARD_ZERO`` — device faults may delay
+    an answer or fail it with a typed error, but a completed op must
+    never return a wrong value.
   * timing metrics (everything else) — wall microseconds depend on the
     machine, and the committed baseline was measured on a dev container,
     not a GitHub runner: a gross slowdown (> ``TIMING_SLOWDOWN`` x
@@ -56,6 +64,10 @@ RATIO_FLOORS = {           # ...but never dip below the hard gates
     # QPS, read-priority NCQ scheduling must keep the read p99 at least
     # 1.5x better than in-order FIFO — the Fig 15 tail claim as a gate.
     "latency_sweep_rp_vs_fifo_p99_speedup": 1.5,
+    # Chaos sweep (benchmarks/chaos_sweep.py): under the transient-stall
+    # schedule with deadlines+retries armed, at least 99% of ops must
+    # still complete (availability floor; the rest must fail typed).
+    "chaos_availability": 0.99,
 }
 # Event-loop accounting metrics (benchmarks/latency_sweep.py): arrivals
 # are seeded and the loop is deterministic, so these gate exactly, like
@@ -65,11 +77,14 @@ EVENT_COUNTER_SUFFIXES = ("_events", "_dispatches", "_admitted",
 HARD_ZEROS = {             # must be 0 in every fresh run, baseline or not
     "reliability_wrong_results_verified",
     "reliability_backend_mismatch",
+    "chaos_wrong_results",
 }
 
 
 def classify(name: str) -> str:
-    if name.startswith("reliability_"):
+    if name == "chaos_availability":
+        return "ratio"
+    if name.startswith(("reliability_", "chaos_")):
         return "counter"
     if "speedup" in name:
         return "ratio"

@@ -4,8 +4,9 @@ from .sim002_observers import Sim002Observers
 from .sim003_hostsync import Sim003HostSync
 from .sim004_counters import Sim004Counters
 from .sim005_verdicts import Sim005Verdicts
+from .sim006_retries import Sim006Retries
 
 ALL_RULES = (Sim001Tickets(), Sim002Observers(), Sim003HostSync(),
-             Sim004Counters(), Sim005Verdicts())
+             Sim004Counters(), Sim005Verdicts(), Sim006Retries())
 
 RULES_BY_ID = {r.rule_id: r for r in ALL_RULES}

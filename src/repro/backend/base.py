@@ -238,7 +238,7 @@ class MatchBackend(abc.ABC):
     def enable_reliability(self, state) -> None:
         """Attach a reliability tier to this backend's flush path.  Usually
         called through ``ReliabilityState.install`` /
-        ``run_functional(..., reliability=...)``."""
+        ``replay(..., RunConfig.reliable(...))``."""
         self.reliability = state
 
     def _open_reliability(self, page_addrs) -> dict:
@@ -256,6 +256,13 @@ class MatchBackend(abc.ABC):
     # (randomized) images — the ground truth searches run against — are
     # identical regardless of backend choice.
     def program_entries(self, page_addr: int, entries, **kw):
+        return self._program_page(page_addr, entries, kw)
+
+    def _program_page(self, page_addr: int, entries, kw):
+        """Program one page on the chip model.  Fault-aware backends
+        (sharded) override this to fan writes out to replicas and remap
+        grown bad blocks; the page keeps its *logical* address — callers
+        and counters never see the physical placement."""
         return self.chips.program_entries(page_addr, entries, **kw)
 
     def submit_program(self, page_addr: int, entries, **kw) -> Ticket:
@@ -298,7 +305,7 @@ class MatchBackend(abc.ABC):
         queue, self._program_queue = self._program_queue, {}
         addrs: list[int] = []
         for page_addr, (entries, kw, tickets) in queue.items():
-            built = self.chips.program_entries(page_addr, entries, **kw)
+            built = self._program_page(page_addr, entries, kw)
             self.stats.programs += 1
             for t in tickets:
                 t._resolve(built)

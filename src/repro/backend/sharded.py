@@ -51,21 +51,25 @@ with device compute of this one.  Timeline accounting stays at flush time
 Timeline coupling.  Pass ``timeline=`` (or ``timeline=True``) to attach a
 ``flash.timeline.BurstTimeline``: every flush reports per-chip batch sizes
 and restaged bytes as ``ChipBurst`` records, which the adapter replays on
-flash/ssd.py's die/channel/PCIe timelines — ``run_functional`` then returns
+flash/ssd.py's die/channel/PCIe timelines — ``frontend.replay`` then
+returns
 measured-bit-exact results plus a simulated latency/energy distribution
 (fig14/15-style) from the functional backend itself.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bits import CHUNKS_PER_PAGE, popcount_words
-from repro.core.commands import Command, Op
+from repro.core.bits import (CHUNKS_PER_PAGE, SLOTS_PER_CHUNK,
+                             popcount_words, unpack_bitmap)
+from repro.core.commands import Command, LookupResponse, Op, SearchResponse
 from repro.core.ecc import OpenVerdict
+from repro.core.page import mask_header_slots
 from repro.core.engine import SimChipArray
 from repro.flash.params import (BITMAP_BYTES, CHUNK_BYTES, FlashParams,
                                 OPEN_OVERHEAD_BYTES, PAGE_BYTES)
@@ -146,11 +150,17 @@ class ShardedSsdBackend(MatchBackend):
     fallback reads on the flash timelines.
     """
 
+    # Bounded program retry budget: a seeded program-failure draw relocates
+    # the page to a spare and retries at most this many times (the SIM006
+    # discipline — no unbounded, unseeded retry loops in the backend).
+    MAX_PROGRAM_ATTEMPTS = 8
+
     def __init__(self, chips: SimChipArray, *, channels: int | None = None,
                  dies_per_channel: int | None = None, page_block: int = 8,
                  lookup_block: int = 8, use_kernel: bool = True,
                  interpret: bool | None = None,
-                 timeline: BurstTimeline | bool | None = None):
+                 timeline: BurstTimeline | bool | None = None,
+                 replicas: int = 1):
         super().__init__(chips)
         n_chips = len(chips.chips)
         if channels is None:
@@ -181,6 +191,19 @@ class ShardedSsdBackend(MatchBackend):
         # Per-chip pending queues — the sharded command namespace.
         self._pending: list[list[tuple[str, Command, Ticket]]] = [
             [] for _ in chips.chips]
+        # Fault tolerance: k-replica page striping plus bad-block remap.
+        # replicas=1 keeps exactly today's single-copy behaviour; with
+        # replicas=k every program fans out to k-1 extra copies on the
+        # next chips round-robin, allocated from the TOP of each chip's
+        # local address space (primary data grows from the bottom).
+        if not 1 <= replicas <= len(chips.chips):
+            raise ValueError(f"replicas={replicas} needs 1..{len(chips.chips)}")
+        self.replicas = replicas
+        self._replica_of: dict[int, tuple[int, ...]] = {}
+        self._spare_next: list[int] = [chips.pages_per_chip - 1
+                                       for _ in chips.chips]
+        # DeviceFaultState (repro.reliability.device_faults) or None.
+        self.faults = None
 
     # ------------------------------------------------------------ geometry
     @classmethod
@@ -204,10 +227,110 @@ class ShardedSsdBackend(MatchBackend):
 
     # ------------------------------------------------------------- storage
     def program_entries(self, page_addr: int, entries, **kw):
-        built = self.chips.program_entries(page_addr, entries, **kw)
+        built = self._program_page(page_addr, entries, kw)
         if self.timeline is not None:
-            self.timeline.observe_program(self.decompose(page_addr)[0])
+            for c in self._program_chips(page_addr):
+                self.timeline.observe_program(c)
         return built
+
+    def _program_chips(self, page_addr: int) -> list[int]:
+        """Chips a logical program lands on: the (possibly remapped)
+        primary plus every replica — replica fan-out is charged on the
+        timelines like any other program."""
+        chips = [self._mapped(page_addr) % self.n_chips]
+        chips += [self._mapped(r) % self.n_chips
+                  for r in self._replica_of.get(page_addr, ())]
+        return chips
+
+    # --------------------------------------------------- fault-aware placing
+    def enable_device_faults(self, state) -> None:
+        """Attach a DeviceFaultState: programs draw seeded failures (grown
+        bad blocks remap to spares), reads consult the outage set at flush
+        and fail over to replicas, and the attached timeline schedules
+        stall windows onto its resource lines."""
+        self.faults = state
+        if self.timeline is not None:
+            self.timeline.attach_faults(state)
+
+    def _alloc_spare(self, chip: int) -> int:
+        """Carve one spare page off the top of a chip's local space."""
+        local = self._spare_next[chip]
+        programmed = self.chips.chips[chip].pages
+        while local >= 0 and local in programmed:
+            local -= 1
+        if local < 0:
+            raise RuntimeError(
+                f"chip {chip}: out of spare pages (replicas/bad-block "
+                "remap exhausted the local address space)")
+        self._spare_next[chip] = local - 1
+        return compose(chip, local, self.n_chips)
+
+    def _next_live_chip(self, chip: int) -> int:
+        """First chip after ``chip`` (round-robin) not in the outage set."""
+        for off in range(1, self.n_chips + 1):
+            c = (chip + off) % self.n_chips
+            if not self.faults.chip_dead(c):
+                return c
+        return chip                        # whole array dead: nowhere left
+
+    def _mapped(self, addr: int) -> int:
+        """Follow the bad-block remap chain to the live physical page."""
+        if self.faults is None:
+            return addr
+        remap = self.faults.remap
+        for _ in range(len(remap)):
+            nxt = remap.get(addr)
+            if nxt is None:
+                break
+            addr = nxt
+        return addr
+
+    def _replica_addrs(self, addr: int) -> tuple[int, ...]:
+        """The k-1 replica pages of a primary (allocated at first program,
+        striped across the next chips round-robin)."""
+        if self.replicas <= 1:
+            return ()
+        reps = self._replica_of.get(addr)
+        if reps is None:
+            chip = addr % self.n_chips
+            reps = tuple(self._alloc_spare((chip + r) % self.n_chips)
+                         for r in range(1, self.replicas))
+            self._replica_of[addr] = reps
+        return reps
+
+    def _program_page(self, page_addr: int, entries, kw):
+        """Fault-aware program: primary (with bad-block remap and bounded
+        seeded retry) plus every replica.  The logical address never
+        changes — only the physical placement does."""
+        built = self._program_physical(page_addr, entries, kw)
+        if self.faults is not None:
+            for rep in self._replica_addrs(page_addr):
+                self._program_physical(rep, entries, kw)
+                self.faults.stats.replica_programs += 1
+        else:
+            for rep in self._replica_addrs(page_addr):
+                self._program_physical(rep, entries, kw)
+        return built
+
+    def _program_physical(self, addr: int, entries, kw):
+        """Program one physical page, relocating off dead chips and around
+        seeded program failures (grown bad blocks) with a bounded retry."""
+        target = self._mapped(addr)
+        if self.faults is not None:
+            chip = target % self.n_chips
+            if self.faults.chip_dead(chip):
+                # The owning chip is offline: relocate to a spare on the
+                # next live chip so writes survive the outage.
+                spare = self._alloc_spare(self._next_live_chip(chip))
+                self.faults.mark_bad(target, spare)
+                target = spare
+            for attempt in range(self.MAX_PROGRAM_ATTEMPTS):
+                if not self.faults.program_fails(target, attempt):
+                    break
+                spare = self._alloc_spare(target % self.n_chips)
+                self.faults.mark_bad(target, spare)
+                target = spare
+        return self.chips.program_entries(target, entries, **kw)
 
     # ------------------------------------------------------------ deferred
     def _submit(self, kind: str, cmd: Command) -> Ticket:
@@ -253,7 +376,7 @@ class ShardedSsdBackend(MatchBackend):
             if self.timeline is not None:
                 staged, self.store.staged_log = self.store.staged_log, []
                 self.timeline.observe_program_group(
-                    [self.decompose(a)[0] for a in programs],
+                    [c for a in programs for c in self._program_chips(a)],
                     restage_chips=[self.decompose(a)[0] for a in staged])
             self.stats.staged_bytes = self.store.staged_bytes
         if not any(self._pending):
@@ -264,10 +387,22 @@ class ShardedSsdBackend(MatchBackend):
         searches, lookups, gathers, plans = [], [], [], []
         for queue in self._pending:
             for kind, cmd, t in queue:
+                if self.faults is not None and self.faults.remap:
+                    cmd = self._remap_cmd(cmd)
                 {"search": searches, "lookup": lookups,
                  "gather": gathers, "plan": plans}[kind].append((cmd, t))
             queue.clear()
         bursts: dict[int, ChipBurst] = {}
+        # Device-fault failover: commands whose chip is offline at the
+        # fault clock leave the kernel path here and are served host-side
+        # from a replica (or fail typed) — see _serve_degraded.
+        if self.faults is not None:
+            dead = self.faults.dead_chips()
+            if dead:
+                searches = self._failover("search", searches, dead, bursts)
+                lookups = self._failover("lookup", lookups, dead, bursts)
+                gathers = self._failover("gather", gathers, dead, bursts)
+                plans = self._failover("plan", plans, dead, bursts)
         # Reliability open burst before staging (open-time ECC repairs
         # restage corrected rows in this flush); retries and full-page
         # fallback reads charge the owning die's timeline record.
@@ -303,6 +438,125 @@ class ShardedSsdBackend(MatchBackend):
 
     def _burst(self, bursts: dict[int, ChipBurst], chip: int) -> ChipBurst:
         return bursts.setdefault(chip, ChipBurst(chip))
+
+    # ---------------------------------------------------- degraded failover
+    def _remap_cmd(self, cmd: Command) -> Command:
+        """Follow grown-bad-block remaps; spares hold the same entries and
+        responses are derandomized (address-independent), so the remapped
+        read is bit-identical to the original."""
+        mapped = self._mapped(cmd.page_addr)
+        vmapped = (self._mapped(cmd.value_page)
+                   if cmd.value_page is not None else None)
+        if mapped == cmd.page_addr and vmapped == cmd.value_page:
+            return cmd
+        return dataclasses.replace(cmd, page_addr=mapped,
+                                   value_page=vmapped)
+
+    def _failover(self, kind: str, items, dead: set[int], bursts):
+        """Split one flush list: commands touching a dead chip are served
+        host-side (degraded) right now; the rest stay on the kernel path."""
+        if not items:
+            return items
+        keep = []
+        for cmd, ticket in items:
+            touched = [cmd.page_addr]
+            if cmd.value_page is not None:
+                touched.append(cmd.value_page)
+            if any(a % self.n_chips in dead for a in touched):
+                self._serve_degraded(kind, cmd, ticket, dead, bursts)
+            else:
+                keep.append((cmd, ticket))
+        return keep
+
+    def _live_addr(self, addr: int, dead: set[int], bursts) -> int:
+        """A live physical address for ``addr``: the page itself when its
+        chip is up, else the first replica on a live chip (charged as one
+        degraded full-page read).  Raises DegradedReadError when neither
+        survives."""
+        from repro.reliability import DegradedReadError
+        if addr % self.n_chips not in dead:
+            return self._mapped(addr)
+        for rep in self._replica_of.get(addr, ()):
+            rep = self._mapped(rep)
+            chip = rep % self.n_chips
+            if chip not in dead:
+                self.faults.stats.failovers += 1
+                b = self._burst(bursts, chip)
+                b.degraded_reads += 1
+                b.pcie_bytes += PAGE_BYTES
+                return rep
+        raise DegradedReadError(addr)
+
+    def _serve_degraded(self, kind: str, cmd: Command, ticket: Ticket,
+                        dead: set[int], bursts) -> None:
+        """Graceful degradation: execute one command host-side against the
+        scalar reference path on a surviving replica.  The replica holds
+        the same entries, and search/gather responses are derandomized, so
+        the result is bit-identical to the healthy read — faults surface
+        only as latency (the degraded full-page reads charged in
+        ``bursts``) or as a typed DegradedReadError, never as wrong data.
+        """
+        from repro.reliability import DegradedReadError
+        try:
+            addr = self._live_addr(cmd.page_addr, dead, bursts)
+            vaddr = (self._live_addr(cmd.value_page, dead, bursts)
+                     if cmd.value_page is not None else None)
+        except DegradedReadError as e:
+            ticket._fail(e)
+            return
+        self.faults.stats.degraded_ops += 1
+        if kind == "search":
+            ticket._resolve(self.chips.search(
+                dataclasses.replace(cmd, page_addr=addr)))
+        elif kind == "gather":
+            ticket._resolve(self.chips.gather(
+                dataclasses.replace(cmd, page_addr=addr)))
+        elif kind == "plan":
+            ticket._resolve(self._plan_host(
+                dataclasses.replace(cmd, page_addr=addr)))
+        else:                              # lookup: the §V-A command pair
+            resp = self.chips.search(Command(
+                Op.SEARCH, addr, query=cmd.query, mask=cmd.mask))
+            bitmap = mask_header_slots(resp.bitmap_words)
+            slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
+            if slots.size == 0:
+                ticket._resolve(LookupResponse(search=resp,
+                                               value_slot=None, value=None))
+                return
+            slot = int(slots[0])
+            g = self.chips.gather(Command.gather(
+                vaddr, 1 << (slot // SLOTS_PER_CHUNK)))
+            off = (slot % SLOTS_PER_CHUNK) * 8
+            ticket._resolve(LookupResponse(
+                search=resp, value_slot=slot,
+                value=bytes(g.chunks[0][off:off + 8]),
+                parity_ok=bool(g.parity_ok[0])))
+
+    # Open-verdict severity, worst-wins across a degraded plan's passes
+    # (mirrors ScalarBackend._VERDICT_RANK).
+    _VERDICT_RANK = {v.value: i for i, v in enumerate((
+        OpenVerdict.CLEAN, OpenVerdict.CLEAN_NEEDS_REFRESH,
+        OpenVerdict.FALLBACK_ECC, OpenVerdict.UNCORRECTABLE))}
+
+    def _plan_host(self, cmd: Command) -> SearchResponse:
+        """Per-pass split reference for a degraded Op.PLAN (scalar recipe)."""
+        acc = np.zeros(16, dtype=np.uint32)
+        verdict = OpenVerdict.CLEAN.value
+        for q, mk in cmd.plan_include:
+            r = self.chips.search(Command(Op.SEARCH, cmd.page_addr,
+                                          query=q, mask=mk))
+            acc |= r.bitmap_words
+            verdict = max(verdict, r.open_verdict,
+                          key=self._VERDICT_RANK.__getitem__)
+        for q, mk in cmd.plan_exclude:
+            r = self.chips.search(Command(Op.SEARCH, cmd.page_addr,
+                                          query=q, mask=mk))
+            acc &= ~r.bitmap_words
+            verdict = max(verdict, r.open_verdict,
+                          key=self._VERDICT_RANK.__getitem__)
+        return SearchResponse(bitmap_words=acc,
+                              match_count=int(popcount_words(acc).sum()),
+                              open_verdict=verdict)
 
     # ------------------------------------------------------------- searches
     def _flush_searches(self, searches, bursts, opens=None) -> None:

@@ -161,6 +161,21 @@ class SSDSim:
         self.energy.match_pj += self.p.e_match_pj() * n_queries
         return ready + self.p.t_match_ns * n_queries
 
+    # ------------------------------------------------------ fault scheduling
+    # Device-fault stalls (repro.reliability.device_faults) are scheduled
+    # directly onto the resource timelines: a blocked die/channel simply has
+    # its free-time pushed past the stall window, so every later phase
+    # queues behind it through the ordinary max(ready, free) discipline —
+    # no special-case latency paths.
+    def block_die(self, die: int, until: float) -> None:
+        """Hold both of a die's timelines (sense + program) to ``until``."""
+        self.die_sense_free[die] = max(self.die_sense_free[die], until)
+        self.die_prog_free[die] = max(self.die_prog_free[die], until)
+
+    def block_channel(self, chan: int, until: float) -> None:
+        """Hold a channel's internal bus timeline to ``until``."""
+        self.chan_free[chan] = max(self.chan_free[chan], until)
+
     # -------------------------------------------------------- page fetches
     def _fetch_full_page(self, page: int, now: float) -> float:
         """Storage-mode full page to host: sense -> bus -> PCIe -> kernel."""

@@ -1,6 +1,6 @@
 """Timeline coupling for functional backends: flushes -> SSD resource time.
 
-The functional path (``run_functional``, the index structures, the sharded
+The functional path (``frontend.replay``, the index structures, the sharded
 backend) computes bit-exact results but, on its own, no latency: time lives
 in the analytic simulator (flash/ssd.py).  This module is the adapter that
 joins them.  A ``ShardedSsdBackend`` reports every flush as a list of
@@ -8,7 +8,7 @@ per-chip ``ChipBurst`` records — how many page senses, match ops and bus
 bytes each chip contributed to the burst — and ``BurstTimeline`` replays
 those counts against a real ``SSDSim``'s monotone resource timelines (die
 sense/program lines, per-channel internal buses, the PCIe link).  The
-result: ``run_functional`` returns measured bitmaps/values *plus* a
+result: ``frontend.replay`` returns measured bitmaps/values *plus* a
 simulated latency distribution and energy account per burst, so
 fig14/15-style latency plots are reproducible from the functional backend
 rather than only from the closed-form simulator.
@@ -63,6 +63,9 @@ class ChipBurst:
     pcie_bytes: int = 0         # host-link payload
     retry_senses: int = 0       # extra senses from §IV-C2 read retries
     fallback_reads: int = 0     # full-page storage-mode reads (ECC fallback)
+    degraded_reads: int = 0     # full-page reads served host-side off a
+                                # replica because the primary chip is dead
+                                # (device-fault tier; charged like fallback)
 
 
 class BurstTimeline:
@@ -76,6 +79,10 @@ class BurstTimeline:
 
     def __init__(self, params: FlashParams):
         self.params = params
+        # Device-fault state (repro.reliability.DeviceFaultState) or None;
+        # survives reset() — the replay attaches it once, before the
+        # post-load reset.
+        self.faults = None
         self.reset()
 
     @staticmethod
@@ -96,7 +103,7 @@ class BurstTimeline:
     def reset(self) -> None:
         """Zero the clock, timelines, latencies and energy (keep params).
 
-        ``run_functional`` calls this after the initial page load so the
+        ``frontend.replay`` calls this after the initial page load so the
         recorded distribution covers the replayed op stream only.
         """
         self.sim = SSDSim(self.params, n_index_pages=0, cache_pages=0,
@@ -104,6 +111,23 @@ class BurstTimeline:
         self.now = 0.0
         self.burst_latencies: list[float] = []
         self.write_latencies: list[float] = []
+
+    def attach_faults(self, state) -> None:
+        """Attach a DeviceFaultState: transient stall windows active at
+        each service time are scheduled onto the SSDSim resource lines
+        (``block_die``/``block_channel``) before the chains run."""
+        self.faults = state
+
+    def _apply_stalls(self, t: float) -> None:
+        if self.faults is None:
+            return
+        for w in self.faults.stalls_active_at(t):
+            if w.kind == "die":
+                self.sim.block_die(w.target % self.params.n_dies,
+                                   w.t_end_ns)
+            else:
+                self.sim.block_channel(w.target % self.params.channels,
+                                       w.t_end_ns)
 
     @property
     def n_chips(self) -> int:
@@ -140,6 +164,7 @@ class BurstTimeline:
             return 0.0
         sim = self.sim
         start = self.now if at is None else at
+        self._apply_stalls(start)
         end = start
         for b in bursts:
             die = b.chip % self.params.n_dies
@@ -151,12 +176,17 @@ class BurstTimeline:
             # Reliability tier: a read-retried open re-senses the page; an
             # ECC fallback decode additionally moves the WHOLE page over
             # the channel bus in storage mode (the §IV-C "give up and read
-            # it out" path) before match mode resumes.
-            for _ in range(b.retry_senses + b.fallback_reads):
+            # it out" path) before match mode resumes.  Device-fault
+            # degraded reads (replica failover to host) are charged the
+            # same way: one sense plus a full page in storage mode — no
+            # free recovery.
+            for _ in range(b.retry_senses + b.fallback_reads
+                           + b.degraded_reads):
                 t = sim._sense(die, t)
-            if b.fallback_reads:
-                t = sim._bus(die, t, b.fallback_reads * PAGE_BYTES,
-                             match_mode=False)
+            if b.fallback_reads or b.degraded_reads:
+                t = sim._bus(die, t,
+                             (b.fallback_reads + b.degraded_reads)
+                             * PAGE_BYTES, match_mode=False)
             for _ in range(b.senses):
                 t = sim._sense(die, t)
             if b.matches:
@@ -186,6 +216,7 @@ class BurstTimeline:
         """
         sim = self.sim
         start = self.now if at is None else at
+        self._apply_stalls(start)
         t = sim._pcie(start, PAGE_BYTES)
         t = sim._program(chip % self.params.n_dies, t)
         self.write_latencies.append(t - start)

@@ -11,8 +11,8 @@ The public API of workload execution:
     ``energy`` / ``counters`` / ``reliability`` sections) shared with the
     analytic simulator's ``workload.runner.run``.
 
-``workload.runner.run_functional`` remains as a deprecated shim over
-:func:`replay`.
+:func:`replay` is the one functional entry point (the historical
+``workload.runner.run_functional`` shim has been removed).
 """
 from .config import ARRIVALS, MODES, SCHEDULERS, RunConfig
 from .eventloop import EventLoop, Request

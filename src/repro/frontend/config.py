@@ -19,14 +19,23 @@ This module collapses all of it into one frozen dataclass:
   * **event frontend** — ``concurrency`` client streams, ``arrival``
     process (``zero``/``poisson``/``trace``), ``scheduler`` policy
     (``fifo``/``read_priority``/``fair_share``), ``ncq_depth`` bound and
-    the per-stream ``seed``.
+    the per-stream ``seed``;
+  * **fault tolerance** — ``faults`` (a seeded
+    :class:`repro.reliability.FaultSchedule` of die/channel stalls, chip
+    outages and program failures), per-command ``deadline_ns`` with
+    ``max_retries`` bounded seeded-backoff re-admissions
+    (``backoff_base_ns``), hedged reads after a ``hedge_quantile`` burst
+    latency, and ``shed_capacity`` overload backpressure (arrivals beyond
+    NCQ + shed_capacity complete with a typed error instead of queueing
+    unboundedly).
 
 Every combination is validated at construction (`__post_init__`), so a
 config that constructs is a config that runs.  Named presets cover the
 common shapes: ``RunConfig.eager()``, ``.buffered()``, ``.reliable()``,
-``.open_loop()`` and ``.event_serial()`` (the bit-parity anchor: event
+``.open_loop()``, ``.event_serial()`` (the bit-parity anchor: event
 mode degenerated to one stream, zero inter-arrival, FIFO — must replay
-bit-identically to ``mode="serial"``).
+bit-identically to ``mode="serial"``) and ``.chaos()`` (event mode with
+a fault schedule plus deadline/retry armed).
 """
 from __future__ import annotations
 
@@ -62,6 +71,13 @@ class RunConfig:
     ncq_depth: int = 64                  # bounded native command queue
     seed: int = 0                        # arrival-process seed root
     record_trace: bool = False           # keep the full event trace
+    # --- fault tolerance (repro.reliability.FaultSchedule | None)
+    faults: typing.Any = None
+    deadline_ns: float | None = None     # per-read deadline (event mode)
+    max_retries: int = 2                 # re-admissions before typed error
+    backoff_base_ns: float = 50_000.0    # exp backoff base (seeded jitter)
+    hedge_quantile: float | None = None  # hedge reads past this burst-lat q
+    shed_capacity: int | None = None     # overflow slots before shedding
 
     # ------------------------------------------------------------ checks
     def __post_init__(self) -> None:
@@ -102,14 +118,42 @@ class RunConfig:
                              f"arrival='trace', not {self.arrival!r}")
         if self.mode == "serial":
             # Event-only knobs left at non-defaults would silently not
-            # apply — refuse instead.
+            # apply — refuse instead.  (``faults`` IS allowed in serial
+            # mode: outages/remaps act on the backend flush path; only the
+            # queueing-time machinery needs the event loop.)
             for field, default in (("concurrency", 1),
                                    ("arrival", "zero"),
-                                   ("scheduler", "fifo")):
+                                   ("scheduler", "fifo"),
+                                   ("deadline_ns", None),
+                                   ("hedge_quantile", None),
+                                   ("shed_capacity", None)):
                 if getattr(self, field) != default:
                     raise ValueError(
                         f"{field}={getattr(self, field)!r} needs "
                         "mode='event' (the serial replay has no queue)")
+        if self.deadline_ns is not None and self.deadline_ns <= 0:
+            raise ValueError(f"deadline_ns must be > 0, got "
+                             f"{self.deadline_ns!r}")
+        if not isinstance(self.max_retries, int) or self.max_retries < 0:
+            raise ValueError(f"max_retries must be an int >= 0, got "
+                             f"{self.max_retries!r}")
+        if self.backoff_base_ns <= 0:
+            raise ValueError(f"backoff_base_ns must be > 0, got "
+                             f"{self.backoff_base_ns!r}")
+        if self.hedge_quantile is not None and not (
+                0.0 < self.hedge_quantile < 1.0):
+            raise ValueError(f"hedge_quantile must be in (0, 1), got "
+                             f"{self.hedge_quantile!r}")
+        if self.shed_capacity is not None and (
+                not isinstance(self.shed_capacity, int)
+                or self.shed_capacity < 0):
+            raise ValueError(f"shed_capacity must be an int >= 0, got "
+                             f"{self.shed_capacity!r}")
+        if self.faults is not None:
+            from repro.reliability import FaultSchedule
+            if not isinstance(self.faults, FaultSchedule):
+                raise ValueError(f"faults must be a FaultSchedule, got "
+                                 f"{self.faults!r}")
         if not isinstance(self.write_buffer, bool):
             from repro.buffer.writebuffer import WriteBuffer
             if not isinstance(self.write_buffer, WriteBuffer):
@@ -153,6 +197,19 @@ class RunConfig:
         (tests/test_frontend.py holds this across every backend)."""
         return cls(mode="event", arrival="zero", concurrency=1,
                    scheduler="fifo", **kw)
+
+    @classmethod
+    def chaos(cls, faults, *, deadline_ns: float = 2_000_000.0,
+              max_retries: int = 4, scheduler: str = "read_priority",
+              **kw) -> "RunConfig":
+        """Event-driven run under a device fault schedule with the
+        robustness tier armed: per-read deadlines, bounded seeded-backoff
+        retries, read-priority scheduling.  Hedging and shedding stay off
+        unless asked for — they change the latency story."""
+        if faults is None:
+            raise ValueError("chaos() needs a FaultSchedule")
+        return cls(mode="event", faults=faults, deadline_ns=deadline_ns,
+                   max_retries=max_retries, scheduler=scheduler, **kw)
 
     # ------------------------------------------------------------- helper
     def with_(self, **kw) -> "RunConfig":

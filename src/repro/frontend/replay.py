@@ -32,12 +32,13 @@ from repro.core.bits import SLOTS_PER_CHUNK, unpack_bitmap
 from repro.core.commands import Command
 from repro.core.page import mask_header_slots
 from repro.core.range_query import evaluate_plan_on_pages, exact_range
-from repro.reliability import UncorrectableReadError, require_clean
+from repro.reliability import (DegradedReadError, UncorrectableReadError,
+                               require_clean)
 from repro.workload.ycsb import KEYS_PER_PAGE, Workload, value_page_of
 
 from .config import RunConfig
-from .report import (CounterReport, EnergyReport, LatencyReport,
-                     ReliabilityReport, RunReport)
+from .report import (CounterReport, EnergyReport, FaultReport,
+                     LatencyReport, ReliabilityReport, RunReport)
 
 FULL_MASK = 0xFFFFFFFFFFFFFFFF
 
@@ -81,6 +82,19 @@ class ReplayCore:
         if self.reliability is not None:
             self.reliability.install(backend)
 
+        # Device-fault tier: outages/stalls/program failures attach AFTER
+        # the bulk load (the load is setup — a chip dead at t=0 keeps its
+        # loaded image and is served via replicas from the first real op).
+        self.fault_state = None
+        if (config.faults is not None or config.deadline_ns is not None
+                or config.hedge_quantile is not None
+                or config.shed_capacity is not None):
+            from repro.reliability import DeviceFaultState, FaultSchedule
+            self.fault_state = DeviceFaultState(
+                config.faults or FaultSchedule.healthy(seed=config.seed))
+            if hasattr(backend, "enable_device_faults"):
+                backend.enable_device_faults(self.fault_state)
+
         # Timeline-coupled backends (sharded + BurstTimeline) measure the
         # replayed op stream only — the bulk load is setup, not workload.
         self.timeline = getattr(backend, "timeline", None)
@@ -96,6 +110,7 @@ class ReplayCore:
         self.out = np.zeros(n, dtype=np.uint64)
         self.hits = np.zeros(n, dtype=bool)
         self.read_errors = np.zeros(n, dtype=bool)
+        self.op_errors = np.zeros(n, dtype=bool)   # fault-tier typed errors
         self.scan_counts = np.zeros(n, dtype=np.int64)
         self.flushes = 0
         self.n_reads = self.n_writes = self.n_scans = 0
@@ -137,6 +152,9 @@ class ReplayCore:
                 r = require_clean(t.result())
             except UncorrectableReadError:
                 self.read_errors[qi] = True
+                continue
+            except DegradedReadError:
+                self.op_errors[qi] = True   # no live replica left
                 continue
             if r.value_slot is None:
                 continue
@@ -193,6 +211,9 @@ class ReplayCore:
             except UncorrectableReadError:
                 self.read_errors[qi] = True
                 continue
+            except DegradedReadError:
+                self.op_errors[qi] = True
+                continue
             slots = np.nonzero(unpack_bitmap(bitmap, 512))[0]
             if slots.size == 0:
                 continue
@@ -208,6 +229,9 @@ class ReplayCore:
                 r = require_clean(g.result())
             except UncorrectableReadError:
                 self.read_errors[qi] = True
+                continue
+            except DegradedReadError:
+                self.op_errors[qi] = True
                 continue
             self.out[qi] = int.from_bytes(
                 bytes(r.chunks[0][off:off + 8]), "little")
@@ -253,6 +277,11 @@ class ReplayCore:
             # Any touched page failing outer-code decode voids the whole
             # scan — a partial count would be a silently wrong result.
             self.read_errors[qi] = True
+            self.flushes += 1
+            self.n_scans += 1
+            return pages
+        except DegradedReadError:
+            self.op_errors[qi] = True
             self.flushes += 1
             self.n_scans += 1
             return pages
@@ -350,6 +379,19 @@ class ReplayCore:
                 refreshes=self.refreshes,
                 stats=(self.reliability.stats
                        if self.reliability is not None else None)))
+        if self.fault_state is not None:
+            fs = self.fault_state.stats
+            rep.faults = FaultReport(
+                timeouts=fs.timeouts, retries=fs.retries,
+                backoff_waits=fs.backoff_waits, hedges_won=fs.hedges_won,
+                failovers=fs.failovers,
+                remapped_blocks=fs.remapped_blocks,
+                degraded_ops=fs.degraded_ops,
+                shed_requests=fs.shed_requests,
+                replica_programs=fs.replica_programs,
+                program_failures=fs.program_failures,
+                op_errors=self.op_errors,
+                n_op_errors=int(self.op_errors.sum()))
         if self.timeline is not None:
             rep.latency = LatencyReport(
                 burst_latencies_ns=np.asarray(

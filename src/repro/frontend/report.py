@@ -21,6 +21,26 @@ The flat attribute names of the two legacy dataclasses remain available
 as read-only properties (``report.read_median_ns``,
 ``report.n_reads``, ...) so pre-RunConfig callers keep working; new code
 reads the nested sections.
+
+Runs with the device-fault tier attached (``RunConfig(faults=...)`` or
+any robustness knob armed) additionally fill the ``faults`` section — a
+:class:`FaultReport` whose counter names are the stable schema the chaos
+benchmark emits and the regression gate checks exactly:
+
+  * ``timeouts`` — read bursts that blew their ``deadline_ns``;
+  * ``retries`` — NCQ re-admissions of timed-out requests;
+  * ``backoff_waits`` — seeded exponential-backoff sleeps taken;
+  * ``hedges_won`` — hedged duplicate reads that beat the primary;
+  * ``failovers`` — reads served from a replica because the primary
+    chip was dead;
+  * ``remapped_blocks`` — bad blocks remapped to spare pages after
+    program failures;
+  * ``degraded_ops`` — ops that fell back to host-side full-page reads
+    through the scalar reference path;
+  * ``shed_requests`` — arrivals refused with a typed error by the
+    overload backpressure;
+  * ``replica_programs`` / ``program_failures`` — write-path mirror
+    traffic and injected program faults.
 """
 from __future__ import annotations
 
@@ -109,6 +129,28 @@ class ReliabilityReport:
 
 
 @dataclasses.dataclass
+class FaultReport:
+    """Device-fault tier outcomes (all zero when the tier is off).
+
+    Counter names are a stable schema — see the module docstring; the
+    chaos-sweep benchmark emits them verbatim and the regression gate
+    compares them exactly.
+    """
+    timeouts: int = 0            # read bursts past deadline_ns
+    retries: int = 0             # NCQ re-admissions after timeout
+    backoff_waits: int = 0       # exponential-backoff sleeps taken
+    hedges_won: int = 0          # hedged duplicate reads that won
+    failovers: int = 0           # replica reads after primary-chip death
+    remapped_blocks: int = 0     # bad blocks remapped to spare pages
+    degraded_ops: int = 0        # host-side scalar-path degraded ops
+    shed_requests: int = 0       # arrivals refused by backpressure
+    replica_programs: int = 0    # replica mirror programs issued
+    program_failures: int = 0    # injected program faults observed
+    op_errors: np.ndarray | None = None   # (N,) bool typed-error flags
+    n_op_errors: int = 0
+
+
+@dataclasses.dataclass
 class RunReport:
     """One run, one shape — analytic, serial replay, or event-driven."""
     source: str = "serial"       # "analytic" | "serial" | "event"
@@ -118,6 +160,7 @@ class RunReport:
         default_factory=CounterReport)
     reliability: ReliabilityReport = dataclasses.field(
         default_factory=ReliabilityReport)
+    faults: FaultReport = dataclasses.field(default_factory=FaultReport)
     # Functional replays only: bit-exact per-op outputs.
     read_values: np.ndarray | None = None   # (N,) uint64, 0 where no hit
     read_hits: np.ndarray | None = None     # (N,) bool

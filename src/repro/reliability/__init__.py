@@ -4,8 +4,16 @@
 one seed; ``ReliabilityState`` (policy.py) threads the §IV-C2/C3 optimistic
 open / voting / selective-verification pipeline through every backend's
 flush, surfacing outer-code failures as typed per-ticket
-``UncorrectableReadError``s.  See README "Reliability tier".
+``UncorrectableReadError``s.  ``FaultSchedule``/``DeviceFaultState``
+(device_faults.py) model *device*-level failures — die/channel stalls,
+permanent chip outages, grown bad blocks — behind replica failover and
+typed ``DegradedReadError``s.  See README "Reliability tier" and "Fault
+tolerance & graceful degradation".
 """
+from .device_faults import (ChipOutage, CommandTimeoutError,
+                            DegradedReadError, DeviceFaultState,
+                            FaultSchedule, FaultStats, OverloadShedError,
+                            StallWindow)
 from .faults import (DAY_NS, FaultModel, majority_flip_prob,
                      sense_false_negative_bound, sense_false_positive_bound)
 from .policy import (PageOpen, ReliabilityPolicy, ReliabilityState,
@@ -17,4 +25,7 @@ __all__ = [
     "sense_false_negative_bound", "sense_false_positive_bound",
     "PageOpen", "ReliabilityPolicy", "ReliabilityState", "ReliabilityStats",
     "UncorrectableReadError", "match_bitmap", "plan_bitmap", "require_clean",
+    "ChipOutage", "CommandTimeoutError", "DegradedReadError",
+    "DeviceFaultState", "FaultSchedule", "FaultStats", "OverloadShedError",
+    "StallWindow",
 ]

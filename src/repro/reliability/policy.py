@@ -172,7 +172,7 @@ class ReliabilityState:
     Holds the policy, the fault model, the running stats, the refresh queue
     and the per-page open-epoch counters.  One instance is attached to one
     backend via ``MatchBackend.enable_reliability`` (usually through
-    ``run_functional(..., reliability=...)``).
+    ``replay(..., RunConfig.reliable(...))``).
     """
 
     def __init__(self, policy: ReliabilityPolicy | None = None,

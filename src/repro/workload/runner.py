@@ -1,28 +1,18 @@
-"""Closed-loop analytic executor + the legacy functional-replay shim.
+"""Closed-loop analytic executor (the timing half of the repro).
 
 Mirrors the paper's measurement protocol (§VI-A4, footnote 6): statistics
 start after a 30 % warmup; QPS = measured queries / measured makespan.
 
-Two executors are reachable from here:
+``run`` is the *timing* simulation on SSDSim (latency/energy, no real
+data).  Reads are match-mode search+gather pairs, writes are buffered
+page programs, and YCSB-E scans (``ops == 2``) are match-mode multi-page
+READS over the key pages the range touches — never writes.  Returns a
+:class:`repro.frontend.RunReport` (source ``"analytic"``).
 
-  * ``run``            — the *timing* simulation on SSDSim (latency/energy,
-                         no real data).  Reads are match-mode
-                         search+gather pairs, writes are buffered page
-                         programs, and YCSB-E scans (``ops == 2``) are
-                         match-mode multi-page READS over the key pages
-                         the range touches — never writes.  Returns a
-                         :class:`repro.frontend.RunReport` (source
-                         ``"analytic"``);
-  * ``run_functional`` — DEPRECATED shim over the frontend API: the
-                         functional execution of the op stream against
-                         real programmed pages now lives in
-                         :func:`repro.frontend.replay`, configured by a
-                         :class:`repro.frontend.RunConfig` (which also
-                         unlocks the event-driven mode: concurrent client
-                         streams, NCQ admission, scheduler policies).
-                         The shim forwards the historical kwargs and
-                         warns; new code calls ``replay(wl, backend,
-                         RunConfig(...))`` directly.
+The *functional* execution of the op stream against real programmed
+pages lives in :func:`repro.frontend.replay`, configured by a
+:class:`repro.frontend.RunConfig` (the ``run_functional`` shim that used
+to forward there served its one promised deprecation cycle and is gone).
 
 ``RunResult`` and ``FunctionalRunResult`` are now aliases of
 ``RunReport`` — the one result schema of every executor — whose legacy
@@ -33,14 +23,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import warnings
 
 import numpy as np
 
 from repro.flash.params import FlashParams
 from repro.flash.ssd import SSDSim
-from repro.frontend import RunConfig, RunReport
-from repro.frontend import replay as _replay
+from repro.frontend import RunReport
 from .ycsb import KEYS_PER_PAGE, Workload
 
 WARMUP_FRACTION = 0.30
@@ -49,28 +37,6 @@ FULL_MASK = 0xFFFFFFFFFFFFFFFF
 # Legacy names: both executor result schemas unified into RunReport.
 RunResult = RunReport
 FunctionalRunResult = RunReport
-
-
-def run_functional(workload: Workload, backend, *, burst: int = 64,
-                   fused: bool = False,
-                   write_buffer=False,
-                   write_high_water: int = 16,
-                   reliability=None) -> RunReport:
-    """DEPRECATED: call ``repro.frontend.replay(wl, backend, RunConfig)``.
-
-    Forwards the historical kwarg surface into a serial-mode
-    :class:`RunConfig` and returns the (shape-compatible)
-    :class:`RunReport`.  Kept one deprecation cycle so pre-RunConfig
-    callers keep working bit-identically.
-    """
-    warnings.warn(
-        "run_functional(...) is deprecated; use "
-        "repro.frontend.replay(workload, backend, RunConfig(...)) — "
-        "presets: RunConfig.eager()/.buffered()/.reliable()",
-        DeprecationWarning, stacklevel=2)
-    return _replay(workload, backend, RunConfig(
-        burst=burst, fused=fused, write_buffer=write_buffer,
-        write_high_water=write_high_water, reliability=reliability))
 
 
 def run(workload: Workload, *, params: FlashParams, system: str,

@@ -43,7 +43,7 @@ class Workload:
     read_ratio: float
     n_index_pages: int
     # Concrete key ids (rank-scrambled), one per op — lets the functional
-    # executor (runner.run_functional) replay the stream against real pages.
+    # executor (repro.frontend.replay) replay the stream against real pages.
     keys: np.ndarray | None = None
     # YCSB-E: scan lengths, one per op (used where ops == 2).  A scan
     # starting at key k covers [k, k + len) and replays as ONE Op.PLAN

@@ -1,0 +1,50 @@
+# analysis: pretend-path=src/repro/frontend/fixture_retry_ok.py
+"""SIM006 true negatives: bounded retries, typed failures, seeded rngs —
+the disciplines the device-fault tier actually uses."""
+import numpy as np
+
+MAX_ATTEMPTS = 8
+
+
+class TypedError(RuntimeError):
+    pass
+
+
+def bounded_retry(backend, cmd):
+    for attempt in range(MAX_ATTEMPTS):     # bounded: always terminates
+        try:
+            return backend.search(cmd)
+        except IOError:
+            continue
+    raise TypedError("retries exhausted")   # typed, not swallowed
+
+
+def while_true_with_break(backend, cmd):
+    while True:
+        try:
+            resp = backend.search(cmd)
+        except IOError:
+            raise TypedError("search failed")
+        break                               # bounded by the break
+    return resp
+
+
+def records_the_outcome(ticket, stats):
+    try:
+        return ticket.result()
+    except IOError:
+        stats.failures += 1                 # outcome recorded, not lost
+        return None
+
+
+def seeded_jitter(seed, qi, attempt, base_ns):
+    rng = np.random.default_rng([seed, 0xB0FF, qi, attempt])
+    return base_ns * rng.random()           # entropy-list idiom
+
+
+def poll_loop_without_try(queue):
+    while True:                             # not a retry loop: no try
+        item = queue.get()
+        if item is None:
+            break
+    return item

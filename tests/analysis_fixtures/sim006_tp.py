@@ -1,0 +1,32 @@
+# analysis: pretend-path=src/repro/frontend/fixture_retry.py
+"""SIM006 true positives: unbounded retries, silent swallowing, unseeded
+randomness — each the exact failure mode the device-fault tier forbids."""
+import numpy as np
+
+
+def retries_forever(backend, cmd):
+    while True:                             # no break: hangs on outage
+        try:
+            return backend.search(cmd)
+        except IOError:
+            continue
+
+
+def swallows_silently(ticket):
+    try:
+        return ticket.result()
+    except Exception:
+        pass                                # error channel vanishes
+
+
+def swallows_with_ellipsis(ticket, fallback):
+    try:
+        return ticket.result()
+    except (ValueError, IOError):
+        ...                                 # same vanishing, spelled ...
+    return fallback
+
+
+def unseeded_jitter(base_ns):
+    rng = np.random.default_rng()           # OS entropy: nondeterministic
+    return base_ns * rng.random()

@@ -83,6 +83,33 @@ def test_sim005_true_negatives():
     assert lint_fixture("sim005_tn.py", "SIM005") == []
 
 
+def test_sim006_true_positives():
+    found = lint_fixture("sim006_tp.py", "SIM006")
+    assert {"unbounded-retry", "swallows:Exception",
+            "swallows:ValueError+IOError", "unseeded-rng"} <= slugs(found)
+    assert {"retries_forever", "swallows_silently",
+            "swallows_with_ellipsis", "unseeded_jitter"} \
+        <= {f.symbol for f in found}
+
+
+def test_sim006_true_negatives():
+    assert lint_fixture("sim006_tn.py", "SIM006") == []
+
+
+def test_sim006_out_of_scope_paths_exempt():
+    """The same patterns outside backend/frontend/reliability are out of
+    scope — an infinite poll loop in the workload layer is legitimate."""
+    import tempfile
+    src = (FIXTURES / "sim006_tp.py").read_text().splitlines()
+    src[0] = "# analysis: pretend-path=src/repro/workload/fixture.py"
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "sim006_workload.py"
+        p.write_text("\n".join(src))
+        found = run_contracts(ROOT, paths=[p],
+                              rules=[RULES_BY_ID["SIM006"]])
+    assert found == []
+
+
 def test_sim005_exempt_layers():
     """The same silent consumption inside backend/ is the plumbing that
     PRODUCES responses — out of scope by path."""

@@ -4,8 +4,8 @@ Contracts held here:
 
   * ``RunConfig`` — frozen, validated at construction (bad enums, event
     knobs in serial mode, poisson without a rate all refuse); presets
-    build the documented shapes; ``run_functional`` still works as a
-    DeprecationWarning shim over ``replay``;
+    build the documented shapes (the ``run_functional`` shim is gone —
+    ``repro.frontend.replay`` is the only functional entry point);
   * ``RunReport`` — one schema for all three executors, legacy flat
     aliases reading through to the nested sections;
   * **bit-parity anchor** — ``RunConfig.event_serial()`` (one stream,
@@ -18,7 +18,14 @@ Contracts held here:
     any arrival trace (hypothesis property over traces);
   * **scheduling** — on a crafted program-backlog trace, FIFO reads
     queue behind the die-program backlog while read_priority reads
-    program-suspend past it.
+    program-suspend past it;
+  * **device-fault tier** — an empty fault schedule with replicas=2 is
+    still bit-identical to the plain serial replay (parity anchor); a
+    dead chip fails reads over to replicas with results bit-identical
+    to the healthy replay (zero wrong results); without replicas the
+    same outage degrades to typed per-op errors, never wrong data; and
+    same seed + same fault schedule => byte-identical RunReport
+    (hypothesis property over schedules).
 """
 import numpy as np
 import pytest
@@ -27,9 +34,8 @@ from repro.backend import make_backend
 from repro.backend.sharded import ShardedSsdBackend
 from repro.core.engine import SimChipArray
 from repro.frontend import (EventLoop, RunConfig, RunReport, replay)
-from repro.reliability import (FaultModel, ReliabilityPolicy,
-                               ReliabilityState)
-from repro.workload.runner import run_functional
+from repro.reliability import (FaultModel, FaultSchedule,
+                               ReliabilityPolicy, ReliabilityState)
 from repro.workload.ycsb import KEYS_PER_PAGE, Workload, generate, \
     value_page_of
 
@@ -91,7 +97,7 @@ def test_runconfig_trace_times_normalized():
 
 
 # --------------------------------------------------------------------------
-# Shim + RunReport shape
+# RunReport shape
 # --------------------------------------------------------------------------
 
 def _mk(name="scalar", n_chips=4, pages=32, **kw):
@@ -99,14 +105,11 @@ def _mk(name="scalar", n_chips=4, pages=32, **kw):
         n_chips=n_chips, pages_per_chip=pages, device_seed=3), **kw)
 
 
-def test_run_functional_shim_warns_and_matches():
-    wl = generate(120, n_key_pages=4, read_ratio=0.7, alpha=0.5, seed=2)
-    with pytest.warns(DeprecationWarning, match="RunConfig"):
-        old = run_functional(wl, _mk(), burst=16, fused=True)
-    new = replay(wl, _mk(), RunConfig(burst=16, fused=True))
-    assert isinstance(old, RunReport) and old.source == "serial"
-    np.testing.assert_array_equal(old.read_values, new.read_values)
-    assert old.flushes == new.flushes and old.programs == new.programs
+def test_run_functional_shim_is_gone():
+    # The deprecation cycle promised in the shim's docstring is over:
+    # repro.frontend.replay is the one functional entry point.
+    import repro.workload.runner as runner
+    assert not hasattr(runner, "run_functional")
 
 
 def test_runreport_legacy_aliases_read_nested_sections():
@@ -335,3 +338,152 @@ def test_fifo_vs_read_priority_same_totals_different_timing():
     assert fifo.programs == rp.programs
     # ... but the FIFO tail carries the program waits.
     assert fifo.latency.read_p99_ns > rp.latency.read_p99_ns
+
+
+# --------------------------------------------------------------------------
+# Device-fault tier: replica parity anchor, failover, chaos determinism
+# --------------------------------------------------------------------------
+
+def _mk_replicated(wl, replicas=2):
+    """Sharded backend with replica striping and spare headroom for the
+    replica copies plus grown-bad-block remaps."""
+    per_chip = (wl.n_index_pages // 4 + 1) * (replicas + 1)
+    return ShardedSsdBackend(
+        SimChipArray(n_chips=4, pages_per_chip=per_chip, device_seed=3),
+        use_kernel=False, interpret=True, replicas=replicas)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("buffered", [False, True])
+def test_replica_event_serial_bit_parity(fused, buffered):
+    """Fault-free parity anchor: replicas=2 plus an attached (empty)
+    fault schedule must not perturb a single bit of the replay — the
+    whole fault tier is latency/bookkeeping until a fault actually
+    fires."""
+    wl = generate(300, n_key_pages=8, read_ratio=0.5, alpha=0.9, seed=7,
+                  scan_ratio=0.05)
+    kw = dict(burst=32, fused=fused)
+    if buffered:
+        kw.update(write_buffer=True, write_high_water=4)
+    rs = replay(wl, _mk_replicated(wl), RunConfig(**kw))
+    re = replay(wl, _mk_replicated(wl), RunConfig.event_serial(
+        faults=FaultSchedule.healthy(seed=7), **kw))
+    _assert_parity(rs, re)
+    # the tier was live (replica mirrors programmed), yet fired nothing
+    f = re.faults
+    assert f.replica_programs > 0
+    assert (f.timeouts, f.retries, f.failovers, f.degraded_ops,
+            f.remapped_blocks, f.shed_requests, f.n_op_errors) \
+        == (0, 0, 0, 0, 0, 0, 0)
+
+
+def test_dead_chip_failover_bit_identical_to_healthy():
+    """Chip 0 dead from t=0 with replicas=2: every read of its pages
+    fails over to a replica, and the answers are bit-identical to the
+    healthy replay — faults surface as latency and counters, never as
+    wrong data."""
+    wl = generate(300, n_key_pages=8, read_ratio=0.6, alpha=0.9, seed=7,
+                  scan_ratio=0.05)
+    kw = dict(burst=16, fused=True, seed=7)
+    healthy = replay(wl, _mk_replicated(wl), RunConfig.event_serial(
+        faults=FaultSchedule.healthy(seed=7), **kw))
+    dead = replay(wl, _mk_replicated(wl), RunConfig.event_serial(
+        faults=FaultSchedule.dead_chip(chip=0, seed=7), **kw))
+    np.testing.assert_array_equal(healthy.read_values, dead.read_values)
+    np.testing.assert_array_equal(healthy.read_hits, dead.read_hits)
+    if healthy.scan_counts is not None:
+        np.testing.assert_array_equal(healthy.scan_counts,
+                                      dead.scan_counts)
+    assert dead.faults.failovers > 0       # the replica path actually ran
+    assert dead.faults.degraded_ops > 0
+    assert dead.faults.n_op_errors == 0    # zero ops lost, zero wrong
+
+
+def test_dead_chip_without_replicas_fails_typed():
+    """replicas=1 and a dead chip: reads of its pages have nowhere to
+    fail over — they must surface as typed per-op errors (op_errors),
+    never as fabricated values, and every other op still completes."""
+    wl = generate(300, n_key_pages=8, read_ratio=0.6, alpha=0.9, seed=7)
+    r = replay(wl, _mk_replicated(wl, replicas=1), RunConfig.event_serial(
+        faults=FaultSchedule.dead_chip(chip=0, seed=7), burst=16))
+    f = r.faults
+    assert f.n_op_errors > 0
+    assert f.failovers == 0                # no replicas to fail over to
+    # errored reads report miss/zero, completed ones match the healthy run
+    healthy = replay(wl, _mk_replicated(wl, replicas=1),
+                     RunConfig.event_serial(burst=16))
+    ok = ~f.op_errors
+    np.testing.assert_array_equal(r.read_values[ok],
+                                  healthy.read_values[ok])
+    assert not r.read_hits[f.op_errors].any()
+    assert not r.read_values[f.op_errors].any()
+
+
+def test_chaos_determinism_property():
+    """Same seed + same fault schedule => identical RunReport: values,
+    per-op errors, every fault counter, the event trace and the latency
+    tail, for every schedule shape."""
+    hypothesis = pytest.importorskip("hypothesis")
+    given = hypothesis.given
+    st = hypothesis.strategies
+
+    wl = generate(160, n_key_pages=8, read_ratio=0.6, alpha=0.9, seed=4)
+
+    def run_once(sched, deadline):
+        return replay(wl, _mk_replicated(wl), RunConfig.chaos(
+            sched, deadline_ns=deadline, max_retries=3,
+            backoff_base_ns=100_000.0, concurrency=4, burst=16, seed=5,
+            record_trace=True))
+
+    @given(kind=st.sampled_from(["healthy", "transient_stall",
+                                 "dying_die", "dead_chip"]),
+           fault_seed=st.integers(min_value=0, max_value=5),
+           deadline=st.sampled_from([400_000.0, 800_000.0]))
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def prop(kind, fault_seed, deadline):
+        mk_sched = {
+            "healthy": lambda: FaultSchedule.healthy(seed=fault_seed),
+            "transient_stall": lambda: FaultSchedule.transient_stall(
+                die=0, t_start_ms=0.05, dur_ms=1.0, seed=fault_seed),
+            "dying_die": lambda: FaultSchedule.dying_die(
+                die=1, t_fail_ms=0.5, program_fail_prob=0.05,
+                seed=fault_seed),
+            "dead_chip": lambda: FaultSchedule.dead_chip(
+                chip=0, seed=fault_seed),
+        }[kind]
+        a = run_once(mk_sched(), deadline)
+        b = run_once(mk_sched(), deadline)
+        np.testing.assert_array_equal(a.read_values, b.read_values)
+        np.testing.assert_array_equal(a.faults.op_errors,
+                                      b.faults.op_errors)
+        for field in ("timeouts", "retries", "backoff_waits",
+                      "hedges_won", "failovers", "remapped_blocks",
+                      "degraded_ops", "shed_requests", "replica_programs",
+                      "program_failures", "n_op_errors"):
+            assert getattr(a.faults, field) == getattr(b.faults, field), \
+                field
+        assert a.counters == b.counters
+        assert a.latency.read_p99_ns == b.latency.read_p99_ns
+        assert a.trace == b.trace and len(a.trace) > 0
+
+    prop()
+
+
+def test_chaos_determinism_seeded_fallback():
+    """No-hypothesis fallback: one deterministic pass per schedule shape
+    so the same-seed contract is exercised even where hypothesis is
+    absent."""
+    wl = generate(160, n_key_pages=8, read_ratio=0.6, alpha=0.9, seed=4)
+    for sched in (FaultSchedule.transient_stall(die=0, t_start_ms=0.05,
+                                                dur_ms=1.0, seed=3),
+                  FaultSchedule.dead_chip(chip=0, seed=3)):
+        cfg = RunConfig.chaos(sched, deadline_ns=400_000.0, max_retries=3,
+                              backoff_base_ns=100_000.0, concurrency=4,
+                              burst=16, seed=5)
+        a = replay(wl, _mk_replicated(wl), cfg)
+        b = replay(wl, _mk_replicated(wl), cfg)
+        np.testing.assert_array_equal(a.read_values, b.read_values)
+        np.testing.assert_array_equal(a.faults.op_errors,
+                                      b.faults.op_errors)
+        assert a.counters == b.counters
+        assert a.latency.read_p99_ns == b.latency.read_p99_ns
