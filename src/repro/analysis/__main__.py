@@ -1,11 +1,15 @@
 """CLI for the contract auditor: ``python -m repro.analysis``.
 
-Default run executes both prongs — the AST contract lint (SIM001..SIM004)
-over ``src/repro`` and the trace-time launch audit (SIM101..SIM105) over
-the batched and sharded backends — applies ``baseline.toml`` and prints
-every finding.  ``--check`` turns non-baselined findings into a nonzero
-exit (the CI gate); ``--write-baseline`` regenerates the allowlist from
-the current tree (reasons of already-pinned entries are preserved).
+Default run executes all three prongs — the AST contract lint
+(SIM001..SIM009) over ``src/repro`` and ``benchmarks/``, the trace-time
+launch audit (SIM101..SIM105) over the batched and sharded backends, and
+the runtime conservation audit (SIM201..SIM204) of the timeline
+accounting — applies ``baseline.toml`` and prints every finding.
+``--check`` turns non-baselined findings into a nonzero exit (the CI
+gate); ``--write-baseline`` regenerates the allowlist from the current
+tree (reasons of already-pinned entries are preserved); ``--github``
+additionally emits ``::error`` problem-matcher annotations and
+``--json-out`` dumps the full finding set for upload as a CI artifact.
 """
 from __future__ import annotations
 
@@ -25,12 +29,19 @@ REPO_ROOT = Path(__file__).resolve().parents[3]
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="SiM backend-contract auditor: AST lint (SIM001..004) "
-                    "+ jaxpr launch audit (SIM101..105).")
+        description="SiM backend-contract auditor: AST lint (SIM001..009) "
+                    "+ jaxpr launch audit (SIM101..105) + runtime "
+                    "conservation audit (SIM201..204).")
     p.add_argument("--check", action="store_true",
                    help="exit nonzero when any non-baselined finding exists")
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="emit findings as JSON instead of text")
+    p.add_argument("--json-out", type=Path, default=None,
+                   help="additionally dump the finding sets as JSON to this "
+                        "file (CI artifact)")
+    p.add_argument("--github", action="store_true",
+                   help="emit GitHub ::error problem-matcher annotations "
+                        "for new findings")
     p.add_argument("--write-baseline", action="store_true",
                    help="regenerate the baseline from the current findings "
                         "(keeps reasons of entries that are still hit)")
@@ -40,7 +51,8 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--root", type=Path, default=REPO_ROOT,
                    help="repository root (default: inferred from package)")
     p.add_argument("--paths", type=Path, nargs="*", default=None,
-                   help="lint these files/dirs instead of src/repro")
+                   help="lint these files/dirs instead of src/repro + "
+                        "benchmarks")
     p.add_argument("--rules", nargs="*", default=None,
                    help="restrict the lint to these rule IDs (e.g. SIM001)")
     p.add_argument("--no-lint", action="store_true",
@@ -49,9 +61,12 @@ def build_parser() -> argparse.ArgumentParser:
                    help="skip the trace-time launch audit")
     p.add_argument("--no-hlo", action="store_true",
                    help="skip the audit's compiled-HLO byte cross-check")
+    p.add_argument("--no-conservation", action="store_true",
+                   help="skip the runtime conservation audit (SIM201..204)")
     p.add_argument("--backends", nargs="*", default=("batched", "sharded"),
                    choices=("batched", "sharded"),
-                   help="backend kinds the launch audit drives")
+                   help="backend kinds the launch and conservation audits "
+                        "drive")
     return p
 
 
@@ -64,17 +79,41 @@ def _select_rules(ids):
     return [RULES_BY_ID[r] for r in ids]
 
 
+def _default_paths(root: Path) -> list[Path]:
+    paths = [root / "src" / "repro"]
+    bench = root / "benchmarks"
+    if bench.is_dir():
+        paths.append(bench)
+    return paths
+
+
 def collect_findings(args) -> list[Finding]:
     findings: list[Finding] = []
     if not args.no_lint:
         rules = _select_rules(args.rules) if args.rules else None
-        findings.extend(run_contracts(args.root, paths=args.paths,
-                                      rules=rules))
+        paths = args.paths if args.paths is not None \
+            else _default_paths(args.root)
+        findings.extend(run_contracts(args.root, paths=paths, rules=rules))
     if not args.no_audit:
         from .launch_audit import run_audit
         findings.extend(run_audit(kinds=tuple(args.backends),
                                   hlo=not args.no_hlo))
+    if not args.no_conservation:
+        from .conservation import run_conservation
+        findings.extend(run_conservation(kinds=tuple(args.backends)))
     return findings
+
+
+def _github_annotation(f: Finding) -> str:
+    """One ::error problem-matcher line per new finding.  Audit findings
+    (path ``audit:<kind>``) have no source location; they annotate the
+    workflow without file/line coordinates."""
+    msg = f"{f.rule} [{f.slug}] {f.symbol}: {f.message or f.slug}"
+    msg = msg.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+    if f.path.startswith("audit:"):
+        return f"::error title={f.rule}::{msg}"
+    return (f"::error file={f.path},line={max(f.line, 1)},"
+            f"title={f.rule}::{msg}")
 
 
 def main(argv=None) -> int:
@@ -90,12 +129,15 @@ def main(argv=None) -> int:
 
     new, accepted, stale = apply_baseline(findings, entries)
 
+    payload = {
+        "new": [vars(f) for f in new],
+        "accepted": [vars(f) for f in accepted],
+        "stale": [vars(e) for e in stale],
+    }
+    if args.json_out is not None:
+        args.json_out.write_text(json.dumps(payload, indent=2) + "\n")
     if args.as_json:
-        print(json.dumps({
-            "new": [vars(f) for f in new],
-            "accepted": [vars(f) for f in accepted],
-            "stale": [vars(e) for e in stale],
-        }, indent=2))
+        print(json.dumps(payload, indent=2))
     else:
         for f in new:
             print(f.format())
@@ -105,6 +147,9 @@ def main(argv=None) -> int:
                   file=sys.stderr)
         print(f"{len(new)} new finding(s), {len(accepted)} baselined, "
               f"{len(stale)} stale baseline entr(ies)", file=sys.stderr)
+    if args.github:
+        for f in new:
+            print(_github_annotation(f))
 
     if args.check and new:
         return 1

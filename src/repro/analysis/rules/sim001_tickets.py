@@ -1,21 +1,17 @@
 """SIM001 — ticket discipline (invariant I1 in repro.backend.base).
 
-Every ``submit_*`` call returns a Ticket that someone must resolve, and a
-``.result()`` on a ticket submitted in the same function must be dominated
-by a ``flush()`` — otherwise the call silently degrades to the eager
-auto-flush path (one launch per command, the §IV-E anti-pattern) or, worse,
-relies on a *later* burst's flush for resolution.
-
-Two sub-rules, both per function scope (a nested def is its own scope —
-cross-function discipline is covered dynamically by the launch audit):
+Every ``submit_*`` call returns a Ticket that someone must resolve.  This
+rule keeps the syntactic sub-check that needs no dataflow:
 
   * ``dropped:<name>`` — a bare expression statement whose value is a
     ``submit_*`` call: the ticket is discarded, so nothing can ever verify
     the command resolved (the bug class fixed in WriteBuffer.flush).
-  * ``result-no-flush:<name>`` — a ``submit_*`` at line S whose first
-    ``.result()`` at line R >= S has no ``flush``/``drain`` call in
-    (S, R].  Line-order is an approximation of dominance, precise enough
-    for this codebase's straight-line submit/flush/result phrasing.
+
+The historical ``result-no-flush`` sub-check (a ``.result()`` not
+dominated by a ``flush()``) was line-order-approximate and flagged the
+eager wrappers in ``backend.base`` as false positives; it now lives in
+SIM009, re-grounded on the dataflow engine's CFGs and call summaries,
+which proves those wrappers clean instead of allowlisting them.
 """
 from __future__ import annotations
 
@@ -25,64 +21,24 @@ from typing import Iterator
 from ..contracts import ParsedModule, callee_name, walk_own
 from ..findings import Finding
 
-_FLUSH_NAMES = ("flush", "drain", "resolve_burst")
-
 
 class Sim001Tickets:
     rule_id = "SIM001"
-    title = "submit_* ticket must be flushed before .result(), never dropped"
+    title = "submit_* tickets are never dropped on the floor"
 
     def applies_to(self, rel_path: str) -> bool:
         return rel_path.endswith(".py")
 
     def check(self, mod: ParsedModule) -> Iterator[Finding]:
         for qualname, fn in mod.functions():
-            yield from self._check_function(mod, qualname, fn)
-
-    def _check_function(self, mod, qualname, fn) -> Iterator[Finding]:
-        submits: list[tuple[int, str]] = []
-        flushes: list[int] = []
-        results: list[int] = []
-        dropped: list[tuple[int, str]] = []
-        for node in walk_own(fn):
-            if isinstance(node, ast.Expr) and isinstance(node.value,
-                                                         ast.Call):
-                name = callee_name(node.value)
-                if name and name.startswith("submit_"):
-                    dropped.append((node.lineno, name))
-            if isinstance(node, ast.Call):
-                name = callee_name(node)
-                if name is None:
-                    continue
-                if name.startswith("submit_"):
-                    submits.append((node.lineno, name))
-                elif any(name == f or name.startswith(f + "_")
-                         for f in _FLUSH_NAMES):
-                    flushes.append(node.lineno)
-                elif name == "result" and isinstance(node.func,
-                                                     ast.Attribute):
-                    results.append(node.lineno)
-        for line, name in dropped:
-            yield Finding(self.rule_id, mod.rel_path, qualname,
-                          f"dropped:{name}", line=line,
-                          message=f"return value of {name}() is discarded; "
-                                  "the ticket can never be verified resolved")
-        results.sort()
-        flagged: set[str] = set()
-        drop_lines = {ln for ln, _ in dropped}
-        for s_line, s_name in submits:
-            if s_line in drop_lines:
-                continue                      # already reported as dropped
-            for r_line in results:
-                if r_line < s_line:
-                    continue
-                if not any(s_line < fl <= r_line for fl in flushes) \
-                        and s_name not in flagged:
-                    flagged.add(s_name)
-                    yield Finding(
-                        self.rule_id, mod.rel_path, qualname,
-                        f"result-no-flush:{s_name}", line=r_line,
-                        message=f".result() reachable after {s_name}() with "
-                                "no dominating flush() — degrades to the "
-                                "eager one-command-per-launch path")
-                break                          # first result at/after submit
+            for node in walk_own(fn):
+                if isinstance(node, ast.Expr) and isinstance(node.value,
+                                                             ast.Call):
+                    name = callee_name(node.value)
+                    if name and name.startswith("submit_"):
+                        yield Finding(
+                            self.rule_id, mod.rel_path, qualname,
+                            f"dropped:{name}", line=node.lineno,
+                            message=f"return value of {name}() is "
+                                    "discarded; the ticket can never be "
+                                    "verified resolved")

@@ -10,27 +10,25 @@ dies on three disciplines:
     outage converts a typed error into a hang.  Bounded forms
     (``for attempt in range(MAX_ATTEMPTS)``, a ``while`` with a real
     condition, or a loop that breaks) are fine;
-  * **seeded randomness** — backoff jitter and fault draws must come
-    from an *explicitly seeded* generator (the repo idiom is an entropy
-    list: ``np.random.default_rng([seed, key, ...])``).  A bare
-    ``default_rng()`` draws from OS entropy, which destroys the
-    same-seed => byte-identical-counters contract the chaos gate
-    enforces;
   * **typed failures** — an ``except`` handler whose body is only
     ``pass`` (or ``...``) silently swallows the error channel; fault
     paths must re-raise, convert to a typed error, or record the outcome.
 
+The historical third sub-check (bare ``default_rng()``) is superseded by
+SIM008, which traces RNG entropy to a declared seed through real
+dataflow instead of pattern-matching the empty-argument spelling.
+
 Scope: the fault-handling layers only — ``src/repro/backend/``,
 ``src/repro/frontend/`` and ``src/repro/reliability/``.  Elsewhere an
-infinite poll loop or an unseeded rng can be legitimate; in these paths
-they are exactly the bugs the chaos sweep exists to catch.
+infinite poll loop can be legitimate; in these paths it is exactly the
+bug the chaos sweep exists to catch.
 """
 from __future__ import annotations
 
 import ast
 from typing import Iterator
 
-from ..contracts import ParsedModule, callee_name, walk_own
+from ..contracts import ParsedModule, walk_own
 from ..findings import Finding
 
 _SCOPED_PREFIXES = ("src/repro/backend/", "src/repro/frontend/",
@@ -121,15 +119,3 @@ class Sim006Retries:
                                     "typed error into a hang — bound the "
                                     "attempts (for attempt in "
                                     "range(MAX)) or break on success")
-                # (c) unseeded rng
-                elif isinstance(node, ast.Call) \
-                        and callee_name(node) == "default_rng" \
-                        and not node.args and not node.keywords:
-                    yield Finding(
-                        self.rule_id, mod.rel_path, qualname,
-                        "unseeded-rng", line=node.lineno,
-                        message="default_rng() with no seed draws OS "
-                                "entropy — fault injection and backoff "
-                                "jitter must be seeded (entropy-list "
-                                "idiom: default_rng([seed, key, ...])) "
-                                "so same seed => identical counters")

@@ -67,13 +67,17 @@ six methods: ``submit_search``, ``submit_gather``, ``submit_lookup``,
 Protocol invariants (statically enforced by ``repro.analysis``; rule IDs
 in brackets — see README "Static gates"):
 
-  I1 [SIM001]  Ticket discipline.  Every ``submit_*`` return value is
-      kept, and a ``.result()`` on a ticket submitted in the same function
-      is dominated by a ``flush()``.  Violations silently degrade to the
-      eager one-command-per-launch path (§IV-E anti-pattern) or lean on a
-      *later* burst's flush.  The eager ``search``/``gather``/``lookup``/
-      ``plan`` wrappers above are the reviewed exception (baselined):
-      ``Ticket.result()`` auto-flushes by contract.
+  I1 [SIM001, SIM009]  Ticket discipline.  Every ``submit_*`` return
+      value is kept (SIM001), and a ``.result()`` on tickets submitted in
+      the same function is dominated by a ``flush()`` when more than one
+      command is pending (SIM009, interprocedural: helper submits and
+      flushes are summarized through the call graph).  Violations
+      silently degrade to the eager one-command-per-launch path (§IV-E
+      anti-pattern) or lean on a *later* burst's flush.  The eager
+      ``search``/``gather``/``lookup``/``plan`` wrappers above are the
+      documented immediate mode — a single straight-line submit whose
+      ``Ticket.result()`` auto-flushes by contract — which the dataflow
+      analysis proves clean (no baseline pin needed).
 
   I2 [SIM002]  Observer completeness.  Every mutation of a stored page
       image (``SimChip.pages``/``raw``) notifies the write observers, and
@@ -91,6 +95,24 @@ in brackets — see README "Static gates"):
       inside the accounting helpers (flush phases, submit/resolve paths,
       deferred tails) — the staged/result byte exactness the launch audit
       (SIM101..SIM105) reconciles against the traced jaxpr depends on it.
+
+  I5 [SIM007]  Unit-suffix convention.  Every name that carries a
+      physical quantity declares its dimension by suffix: ``_ns`` for
+      time, ``_pj`` for energy, ``_bytes`` for payload sizes, ``_prob``
+      (or ``_probs``) for probabilities — and a value only flows between
+      names of the same dimension.  Adding, subtracting or comparing two
+      different declared dimensions (a latency landing in an energy
+      field two calls away) is a lint finding; products and ratios are
+      deliberately unconstrained so unit conversions (``ms * MS_NS``)
+      and rates (``bytes / ns``) stay idiomatic.
+
+  I6 [SIM008]  Seed provenance.  Every RNG construction
+      (``default_rng``, ``SeedSequence``, ``PRNGKey``, ...) traces to a
+      literal or an explicitly seed-named value (``seed``, ``*_seed``,
+      ``entropy``) — through assignments, entropy-list mixing, helper
+      returns, and every call site when the seed arrives as a parameter.
+      Wall-clock or OS entropy anywhere in the chain breaks replay
+      determinism and the seeded fault-injection tier with it.
 """
 from __future__ import annotations
 

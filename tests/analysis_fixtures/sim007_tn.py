@@ -1,0 +1,43 @@
+# analysis: pretend-path=src/repro/fixtures/sim007_tn.py
+"""SIM007 true negatives: the unit algebra the repo legitimately uses —
+conversions by multiplication, rates by division, same-dimension sums,
+dimensionless intermediates — must never false-positive."""
+
+MS_NS = 1_000_000.0
+
+
+def window_ns(t_start_ms):
+    return t_start_ms * MS_NS               # conversion: multiply is unknown
+
+
+def bandwidth(n_bytes, dt_ns):
+    return n_bytes / dt_ns                  # rate: division clears the dim
+
+
+def add_same_dimension(a_ns, b_ns):
+    total_ns = a_ns + b_ns
+    return total_ns + 1.0                   # literals are dimensionless
+
+
+def dimensionless_intermediate(a_ns, scale):
+    x = a_ns * scale
+    return x + 7                            # unknown + unknown: clean
+
+
+def accumulate(energy_pj, step_pj, n):
+    for _ in range(n):
+        energy_pj += step_pj                # augmented same-dim sum
+    return energy_pj
+
+
+def helper_latency_ns(a_ns, b_ns):
+    return max(a_ns, b_ns)                  # passthrough keeps the dim
+
+
+def charge_time(total_ns):
+    return total_ns
+
+
+def cross_function_same_dim(a_ns, b_ns):
+    # interprocedural TN: summarized ns return into an ns parameter
+    return charge_time(helper_latency_ns(a_ns, b_ns))

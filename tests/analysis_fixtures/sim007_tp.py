@@ -1,0 +1,43 @@
+# analysis: pretend-path=src/repro/fixtures/sim007_tp.py
+"""SIM007 true positives: physical dimensions crossing suffix boundaries.
+
+Includes the interprocedural case the per-function SIM001–006 generation
+could never see: a helper's *return* dimension flowing into a parameter
+that declares a different one, two calls away.
+"""
+
+
+def adds_time_to_energy(lat_ns, cost_pj):
+    return lat_ns + cost_pj                 # mix:ns+pj
+
+
+def mislabels_assignment(t_ns):
+    energy_pj = t_ns                        # mis-assign:energy_pj
+    return energy_pj
+
+
+def mislabeled_keyword(charge, dt_ns):
+    return charge(cost_pj=dt_ns)            # mis-call:charge.cost_pj
+
+
+def compares_bytes_to_time(n_bytes, dt_ns):
+    return n_bytes < dt_ns                  # mix:bytes+ns (comparison)
+
+
+def returns_wrong_dim_ns(cost_pj):
+    return cost_pj                          # mis-return:pj
+
+
+def total_latency_ns(a_ns, b_ns):
+    return a_ns + b_ns
+
+
+def charge_energy(energy_pj):
+    return energy_pj * 1.0
+
+
+def cross_function_leak(a_ns, b_ns):
+    # Interprocedural: the helper's summarized return dimension (ns) lands
+    # in a pj-suffixed positional parameter — no single-function view of
+    # either callee shows the mismatch.
+    return charge_energy(total_latency_ns(a_ns, b_ns))

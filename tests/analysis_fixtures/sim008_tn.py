@@ -1,0 +1,40 @@
+# analysis: pretend-path=src/repro/fixtures/sim008_tn.py
+"""SIM008 true negatives: every seeding idiom the repo actually uses —
+direct seeds, entropy lists mixing a seed with op indices, derived seeds,
+seeded-returning helpers, and interprocedurally-proven parameters."""
+import numpy as np
+
+
+def direct_seed(seed):
+    return np.random.default_rng(seed)
+
+
+def entropy_list_idiom(seed, qi, attempt):
+    # one seeded component makes the mix deterministic given the seed
+    return np.random.default_rng([seed, 0xB0FF, qi, attempt])
+
+
+def derived_seed(config):
+    return np.random.default_rng(config.seed ^ 0xD1CE)
+
+
+def literal_seed():
+    return np.random.default_rng(1234)
+
+
+def _derive_entropy(base):
+    return 0xFEED + base                    # literal component: seeded
+
+
+def via_seeded_helper(base):
+    # the helper's returns-seeded summary proves this clean
+    return np.random.default_rng(_derive_entropy(base))
+
+
+def _fixture_rng_from_key(key):
+    # the parameter is proven seeded at every call site below
+    return np.random.default_rng(key)
+
+
+def all_sites_seeded(schedule, qi):
+    return _fixture_rng_from_key([schedule.seed, qi])

@@ -1,0 +1,24 @@
+# analysis: pretend-path=src/repro/fixtures/sim008_tp.py
+"""SIM008 true positives: RNG constructions whose entropy never traces to
+a declared seed — including the interprocedural case where the entropy is
+a parameter and a call site passes an unseeded value."""
+import numpy as np
+
+
+def no_entropy_at_all():
+    return np.random.default_rng()          # unseeded-rng
+
+
+def os_entropy_laundered():
+    import time
+    noise = time.time_ns()                  # not a seed: wall-clock entropy
+    return np.random.default_rng(noise)     # untraced-rng
+
+
+def _fixture_rng_from_knob(knob):
+    # provenance depends on every caller: flagged via the call sites below
+    return np.random.default_rng(knob)      # untraced-rng:knob
+
+
+def passes_wallclock(clock):
+    return _fixture_rng_from_knob(clock.tick())

@@ -1,0 +1,34 @@
+# analysis: pretend-path=src/repro/fixtures/sim009_tn.py
+"""SIM009 true negatives: the documented immediate mode (one straight-line
+submit + result — what the old syntactic SIM001 falsely flagged on the
+MatchBackend eager wrappers) and bursts resolved by explicit or
+interprocedurally-summarized flushes."""
+
+
+def eager_wrapper(backend, cmd):
+    # single pending ticket: Ticket.result()'s auto-flush IS the
+    # documented immediate mode, not an implicit multi-command burst
+    return backend.submit_search(cmd).result()
+
+
+def flushed_burst(backend, cmds):
+    tickets = [backend.submit_search(c) for c in cmds]
+    backend.flush()
+    return [t.result() for t in tickets]
+
+
+def _stage_and_flush(backend, cmds):
+    tickets = [backend.submit_gather(c) for c in cmds]
+    backend.flush()
+    return tickets
+
+
+def helper_flushed_burst(backend, cmds):
+    # the helper's may-flush summary proves the burst resolved
+    tickets = _stage_and_flush(backend, cmds)
+    return [t.result() for t in tickets]
+
+
+def submit_only(backend, cmd):
+    # handing the ticket to the caller is not a violation here
+    return backend.submit_search(cmd)

@@ -1,0 +1,29 @@
+# analysis: pretend-path=src/repro/fixtures/sim009_tp.py
+"""SIM009 true positives: multi-command bursts resolved through the
+Ticket.result() auto-flush instead of an explicit flush() — including the
+interprocedural case where the submits hide inside a helper, which no
+per-function rule could catch."""
+
+
+def looped_implicit_burst(backend, cmds):
+    tickets = [backend.submit_search(c) for c in cmds]
+    return [t.result() for t in tickets]    # result-no-flush:submit_search
+
+
+def two_pending_at_result(backend, a, b):
+    t1 = backend.submit_search(a)
+    t2 = backend.submit_gather(b)
+    return t1.result(), t2.result()         # two commands pending
+
+
+def _stage_probe(backend, cmd):
+    # returns with its ticket still pending — the caller must flush
+    return backend.submit_search(cmd)
+
+
+def helper_hidden_burst(backend, a, b):
+    t1 = _stage_probe(backend, a)
+    t2 = _stage_probe(backend, b)
+    # interprocedural: the pending tickets were created two frames down,
+    # so the old syntactic SIM001 saw no submit_* here at all
+    return t1.result(), t2.result()         # result-no-flush:_stage_probe
